@@ -1,0 +1,68 @@
+"""Table 2 reproduction: end-to-end graph algorithms, TDO-GP vs the
+Ligra-Dist/direct baseline (the paper's competitors Gemini/Graphite/LA3 are
+not runnable offline; per Table 3's methodology the controlled comparison is
+the same engine with TD-Orch ingestion disabled).
+
+Datasets: synthetic analogues spanning the paper's characteristic axes —
+BA (power-law social, Twitter-like), ER (unskewed), grid (road-usa-like
+high diameter), star (adversarial hub).
+"""
+from __future__ import annotations
+
+from repro.graph import (barabasi_albert, bc, bfs, cc, erdos_renyi, grid_2d,
+                         ingest, pagerank, sssp, star_graph)
+
+from .common import row, timeit
+
+ALGS = {
+    "BFS": lambda og, **kw: bfs(og, 0, **kw),
+    "SSSP": lambda og, **kw: sssp(og, 0, **kw),
+    "BC": lambda og, **kw: bc(og, 0, **kw),
+    "CC": lambda og, **kw: cc(og, **kw),
+    "PR": lambda og, **kw: pagerank(og, tol=1e-8, max_iter=30, **kw),
+}
+
+
+def alg_pe(alg, og):
+    """Run under the Ligra-Dist baseline cost model (per-edge RDMA)."""
+    return alg(og, per_edge_comm=True)
+
+
+def _graphs(quick):
+    n = 4000 if quick else 30_000
+    gs = {
+        "ba": barabasi_albert(n, attach=8, seed=1),
+        "er": erdos_renyi(n, avg_degree=16, seed=2),
+        "grid": grid_2d(60 if quick else 173, 60 if quick else 173),
+        "star": star_graph(n),
+    }
+    return {k: v.with_weights(seed=3) for k, v in gs.items()}
+
+
+def run(quick: bool = False):
+    P = 16
+    rows = []
+    for gname, g in _graphs(quick).items():
+        og_td = ingest(g, P, seed=0)
+        og_dd = ingest(g, P, seed=0, strategy="direct")
+        for aname, alg in ALGS.items():
+            if quick and aname in ("BC",) and gname == "grid":
+                continue
+            wall_td = timeit(lambda: alg(og_td), repeats=1, warmup=0)
+            _, info_td = alg(og_td)
+            _, info_dd = alg_pe(alg, og_dd)
+            bsp_td = info_td.comm_time() + 0.25 * info_td.compute_time()
+            bsp_dd = info_dd.comm_time() + 0.25 * info_dd.compute_time()
+            rows.append(row(
+                f"graph/{gname}/{aname}", wall_td * 1e6,
+                f"bsp_tdorch={bsp_td:.0f};bsp_direct={bsp_dd:.0f};"
+                f"speedup={bsp_dd / max(bsp_td, 1e-9):.2f}x;"
+                f"rounds={info_td.rounds};"
+                f"edges_processed={info_td.total_edges_processed}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_csv
+
+    print_csv(run())

@@ -1,0 +1,77 @@
+"""Per-kernel microbenchmarks: wall time of the jnp reference paths on this
+CPU host (the Pallas kernels target TPU; interpret mode validates
+correctness, not speed) + derived achieved GB/s / GFLOP/s so the roofline
+columns have measured single-host anchors.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.histogram.ref import histogram_ref
+from repro.kernels.mamba_scan.kernel import ssd_scan
+from repro.kernels.moe_gemm.ref import grouped_gemm_ref
+from repro.kernels.segment_combine.ref import segment_add_ref
+
+from .common import row, timeit
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    rows = []
+    # flash attention ref
+    B, S, H, KV, hd = (1, 512, 4, 2, 64) if quick else (2, 1024, 8, 2, 64)
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    f = jax.jit(lambda q, k, v: attention_ref(q, k, v))
+    t = timeit(lambda: jax.block_until_ready(f(q, k, v)))
+    flops = 4 * B * H * S * S * hd / 2
+    rows.append(row("kernel/flash_attention_ref", t * 1e6,
+                    f"gflops={flops / t / 1e9:.1f}"))
+    # grouped gemm
+    M, K, N, G = (512, 128, 256, 8) if quick else (4096, 256, 512, 16)
+    sizes = np.full(G, M // G, np.int32)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(G, K, N)), jnp.float32)
+    gs = jnp.asarray(sizes)
+    f = jax.jit(lambda x, w, gs: grouped_gemm_ref(x, w, gs))
+    t = timeit(lambda: jax.block_until_ready(f(x, w, gs)))
+    rows.append(row("kernel/moe_gemm_ref", t * 1e6,
+                    f"gflops={2 * M * K * N / t / 1e9:.1f}"))
+    # histogram
+    N_ids, E = (100_000, 64) if quick else (1_000_000, 64)
+    ids = jnp.asarray(rng.integers(0, E, N_ids), jnp.int32)
+    f = jax.jit(lambda i: histogram_ref(i, E))
+    t = timeit(lambda: jax.block_until_ready(f(ids)))
+    rows.append(row("kernel/histogram_ref", t * 1e6,
+                    f"gitems_s={N_ids / t / 1e9:.2f}"))
+    # segment combine
+    Nv, V, W = (50_000, 1024, 8) if quick else (500_000, 4096, 8)
+    vals = jnp.asarray(rng.normal(size=(Nv, W)), jnp.float32)
+    seg = jnp.asarray(rng.integers(0, V, Nv), jnp.int32)
+    f = jax.jit(lambda v, s: segment_add_ref(v, s, V))
+    t = timeit(lambda: jax.block_until_ready(f(vals, seg)))
+    rows.append(row("kernel/segment_combine_ref", t * 1e6,
+                    f"gbs={Nv * W * 4 / t / 1e9:.2f}"))
+    # mamba ssd chunk scan (interpret-mode Pallas — correctness-grade timing)
+    B2, S2, nh, hd2, ds = (1, 128, 2, 16, 16) if quick else (2, 256, 4, 32, 32)
+    x2 = jnp.asarray(rng.normal(size=(B2, S2, nh, hd2)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B2, S2, nh)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2, nh), jnp.float32)
+    Bc = jnp.asarray(rng.normal(size=(B2, S2, ds)), jnp.float32)
+    Cc = jnp.asarray(rng.normal(size=(B2, S2, ds)), jnp.float32)
+    t = timeit(lambda: jax.block_until_ready(
+        ssd_scan(x2, dt, A, Bc, Cc, chunk=64, interpret=True)),
+        repeats=1, warmup=1)
+    rows.append(row("kernel/mamba_scan_interpret", t * 1e6,
+                    "correctness-grade (interpret mode)"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_csv
+
+    print_csv(run())

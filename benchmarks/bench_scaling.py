@@ -1,0 +1,57 @@
+"""Fig. 8 (strong scaling) + Fig. 9 (weak scaling, ER vs BA) reproduction.
+
+Strong: fixed BA graph, P ∈ {1,2,4,8,16}: BSP time should fall near-linearly
+for TDO-GP while the direct baseline flattens (hot vertices serialize).
+Weak: edges-per-machine held constant (paper: 40M; scaled down for CPU):
+TDO-GP's BSP time stays ≈flat; the baseline's grows with P on skewed (BA)
+inputs.
+"""
+from __future__ import annotations
+
+from repro.graph import barabasi_albert, bc, erdos_renyi, ingest, pagerank
+
+from .common import row
+
+
+def _bsp(info):
+    return info.comm_time() + 0.25 * info.compute_time()
+
+
+def run(quick: bool = False):
+    rows = []
+    machines = [1, 2, 4, 8] if quick else [1, 2, 4, 8, 16]
+    # ---- strong scaling (Fig. 8): BC + PR on a fixed BA graph
+    g = barabasi_albert(3000 if quick else 20_000, attach=8, seed=4)
+    for P in machines:
+        for label, alg in [
+                ("BC", lambda og, **kw: bc(og, 0, **kw)),
+                ("PR", lambda og, **kw: pagerank(og, max_iter=10, **kw))]:
+            _, td = alg(ingest(g, P, seed=0))
+            _, dd = alg(ingest(g, P, seed=0, strategy="direct"),
+                        per_edge_comm=True)
+            rows.append(row(f"strong/{label}/P{P}", 0.0,
+                            f"bsp_tdorch={_bsp(td):.0f};"
+                            f"bsp_direct={_bsp(dd):.0f}"))
+    # ---- weak scaling (Fig. 9): fixed edges per machine, ER vs BA
+    edges_per_machine = 10_000 if quick else 40_000
+    for gen, label in [(erdos_renyi, "ER"), (barabasi_albert, "BA")]:
+        for P in machines:
+            m_target = edges_per_machine * P
+            if label == "ER":
+                g = gen(max(m_target // 16, 64), avg_degree=16, seed=P)
+            else:
+                g = gen(max(m_target // 16, 64), attach=8, seed=P)
+            _, td = pagerank(ingest(g, P, seed=0), max_iter=10)
+            _, dd = pagerank(ingest(g, P, seed=0, strategy="direct"),
+                             max_iter=10, per_edge_comm=True)
+            rows.append(row(
+                f"weak/{label}/P{P}", 0.0,
+                f"bsp_tdorch_per_edge={_bsp(td) / g.m * 1e3:.2f};"
+                f"bsp_direct_per_edge={_bsp(dd) / g.m * 1e3:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_csv
+
+    print_csv(run())

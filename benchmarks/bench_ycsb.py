@@ -1,0 +1,64 @@
+"""Fig. 5 reproduction: YCSB A/C/LOAD × Zipf {1.5, 2.0, 2.5} weak scaling
+over P ∈ {2,4,8,16} simulated machines, four orchestration engines.
+
+The paper's metric is wall time on a 16-machine MPI cluster; our substrate
+is the BSP cost simulator, so we report (i) simulated BSP time (g·h + w,
+the quantity Theorem 1 bounds) and (ii) host wall time of the engines.
+The §4 headline — geomean speedup of TD-Orch over direct-push / sort /
+direct-pull — is computed the same way as the paper's (geomean over all
+workload cells).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kvstore import DistributedHashTable, make_ycsb_batch
+
+from .common import row, timeit
+
+ENGINES = ["tdorch", "push", "pull", "sort"]
+
+
+def run(quick: bool = False):
+    tasks_per_machine = 5_000 if quick else 50_000
+    machines = [2, 4, 8] if quick else [2, 4, 8, 16]
+    gammas = [1.5, 2.5] if quick else [1.5, 2.0, 2.5]
+    workloads = ["A", "C", "LOAD"]
+    rows = []
+    bsp = {e: [] for e in ENGINES}
+    for P in machines:
+        nkeys = 16 * tasks_per_machine  # table >> batch, like YCSB load
+        for g in gammas:
+            for wl in workloads:
+                keys, is_read, operand = make_ycsb_batch(
+                    wl, tasks_per_machine, P, nkeys, gamma=g, seed=17)
+                for eng in ENGINES:
+                    ht = DistributedHashTable(nkeys, P, value_width=16)
+
+                    def call():
+                        return ht.execute_batch(keys, is_read, operand,
+                                                engine=eng)
+
+                    wall = timeit(call, repeats=1, warmup=0)
+                    res = call()
+                    t = res.report.bsp_time(g=1.0, t=0.25)
+                    bsp[eng].append(t)
+                    rows.append(row(
+                        f"ycsb/{wl}/P{P}/zipf{g}/{eng}",
+                        wall * 1e6,
+                        f"bsp_time={t:.0f};comm={res.report.comm_time:.0f};"
+                        f"imb={res.report.imbalance()['comm']:.2f}"))
+    # §4 headline: geomean speedups of tdorch over the three baselines
+    ours = np.array(bsp["tdorch"])
+    for other in ["push", "sort", "pull"]:
+        sp = np.exp(np.mean(np.log(np.array(bsp[other]) / ours)))
+        rows.append(row(f"ycsb/geomean_speedup_vs_{other}", 0.0,
+                        f"{sp:.2f}x (paper: push 2.09x, sort 1.42x, "
+                        f"pull 2.83x)"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_csv
+
+    print_csv(run())

@@ -1,0 +1,71 @@
+"""Render dryrun/roofline JSON records into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m benchmarks.report --dryrun dryrun_full.json \
+        --roofline roofline_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def _gib(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(records):
+    out = ["| arch | shape | mesh | mem/dev GiB | HLO flops/dev | coll GiB/dev | compile s |",
+           "|---|---|---|---|---|---|---|"]
+    for r in records:
+        if r["status"] == "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                f"| {_gib(r['memory']['peak_per_device_bytes'])} "
+                f"| {r['cost']['flops']:.2e} "
+                f"| {_gib(r['collectives']['wire_bytes_per_device'])} "
+                f"| {r['compile_s']} |")
+        elif r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                       f"| — | — | — | skip: sub-quadratic only |")
+        else:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                       f"| FAILED | | | |")
+    return "\n".join(out)
+
+
+def roofline_table(records):
+    out = ["| arch | shape | compute ms | memory ms | collective ms | dominant | useful | roofline-bound MFU |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        if r["status"] == "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} "
+                f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+                f"| {r['collective_s']*1e3:.2f} | **{r['dominant']}** "
+                f"| {r['useful_ratio']:.2f} | {r['mfu_bound']:.3f} |")
+        elif r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skip | — | — |")
+        else:
+            out.append(f"| {r['arch']} | {r['shape']} | FAILED: "
+                       f"{r.get('error', '')[:60]} | | | | | |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default=None)
+    ap.add_argument("--roofline", default=None)
+    args = ap.parse_args()
+    if args.dryrun:
+        with open(args.dryrun) as f:
+            print("### Dry-run records\n")
+            print(dryrun_table(json.load(f)))
+            print()
+    if args.roofline:
+        with open(args.roofline) as f:
+            print("### Roofline records\n")
+            print(roofline_table(json.load(f)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark driver — one module per paper table/figure:
+
+    Fig. 5   bench_ycsb       YCSB × Zipf × P, four engines + §4 geomeans
+    Table 2  bench_graph      5 algorithms × 4 graph families vs direct
+    Fig. 8/9 bench_scaling    strong + weak scaling (ER vs BA)
+    Fig. 10  bench_breakdown  comm/compute/sync breakdown
+    Tab. 3/4 bench_ablation   no-TD-Orch + T1/T2/T3 ablations
+    (beyond) bench_moe        TD-Orch vs push/pull as the MoE dispatcher
+    (beyond) bench_kernels    per-kernel microbenchmarks
+
+Prints ``name,us_per_call,derived`` CSV. `--quick` shrinks sizes ~10×.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (bench_ablation, bench_breakdown, bench_graph, bench_kernels,
+               bench_moe, bench_scaling, bench_ycsb)
+from .common import print_csv
+
+SUITES = {
+    "ycsb": bench_ycsb,
+    "graph": bench_graph,
+    "scaling": bench_scaling,
+    "breakdown": bench_breakdown,
+    "ablation": bench_ablation,
+    "moe": bench_moe,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all", choices=["all", *SUITES])
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    names = list(SUITES) if args.suite == "all" else [args.suite]
+    rows = []
+    for name in names:
+        t0 = time.time()
+        rows += SUITES[name].run(quick=args.quick)
+        print(f"# suite {name} done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+    print_csv(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Serving example: batched prefill + greedy decode with KV caches on a
+reduced tinyllama config; verifies decode matches teacher forcing.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.launch.serve import generate
+from repro.models import Model
+
+cfg = get_reduced("tinyllama-1.1b")
+model = Model(cfg, scan_layers=True)
+params = model.init(0)
+
+rng = np.random.default_rng(0)
+B, S, GEN = 4, 32, 48
+prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+
+t0 = time.perf_counter()
+seqs = generate(model, params, prompts, GEN)
+dt = time.perf_counter() - t0
+print(f"prefill({B}×{S}) + decode({GEN}) in {dt:.2f}s "
+      f"-> {B * GEN / dt:.1f} tok/s (CPU, incl. compile)")
+
+# consistency: greedy decode == argmax of teacher-forced logits
+full, _, _ = model.forward(params, tokens=seqs[:, :-1])
+greedy = np.asarray(jnp.argmax(full[:, S - 1:], axis=-1))
+print("decode==teacher-forced argmax:",
+      bool((greedy == np.asarray(seqs[:, S:])).all()))
+print("sample:", np.asarray(seqs[0, S:S + 16]).tolist())

@@ -1,0 +1,56 @@
+"""End-to-end driver (deliverable b): train a ~100M-param granite-style MoE
+LM for a few hundred steps on CPU, with TD-Orch push-pull expert dispatch,
+async checkpointing, and a mid-run injected node failure + recovery.
+
+    PYTHONPATH=src python examples/train_moe.py [--steps 300]
+"""
+import argparse
+import tempfile
+
+import jax
+
+from repro.data import SyntheticLMStream
+from repro.models import Model, ModelConfig, MoEConfig
+from repro.optim import AdamWConfig
+from repro.runtime import FailureInjector, Trainer, TrainerConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300,
+                help="~100M MoE on CPU runs ≈1-2 s/step after compile")
+ap.add_argument("--fail-at", type=int, default=150)
+args = ap.parse_args()
+
+# ~100M params: a granite-moe-style config scaled to CPU
+cfg = ModelConfig(
+    name="granite-moe-100m", vocab_size=8192, d_model=512, n_layers=6,
+    n_heads=8, n_kv_heads=4, d_ff=0, pattern="moe",
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=1024,
+                  dispatch="tdorch", capacity_factor=1.5, num_hot=2),
+    tie_embeddings=True, param_dtype="float32", compute_dtype="float32")
+
+model = Model(cfg, scan_layers=True)
+n_params = model.param_count(model.init(0))
+print(f"model: {cfg.name}  params={n_params / 1e6:.1f}M  "
+      f"(active/token ≈ {cfg.active_param_count() / 1e6:.0f}M)")
+
+stream = SyntheticLMStream(vocab_size=cfg.vocab_size, batch_size=8,
+                           seq_len=64, seed=0, noise=0.02)
+ckpt_dir = tempfile.mkdtemp(prefix="repro_moe_")
+trainer = Trainer(
+    model,
+    AdamWConfig(peak_lr=3e-3, warmup_steps=30, total_steps=args.steps),
+    TrainerConfig(total_steps=args.steps, checkpoint_every=50,
+                  checkpoint_dir=ckpt_dir, log_every=20),
+    stream,
+    failure_injector=FailureInjector(schedule={args.fail_at: [0]}),
+)
+out = trainer.run()
+print(f"\n{'step':>6} {'loss':>8} {'gnorm':>7} {'ms/step':>8}")
+for h in out["history"]:
+    print(f"{h['step']:6d} {h['loss']:8.4f} {h['grad_norm']:7.2f} "
+          f"{h['sec_per_step'] * 1e3:8.0f}")
+first, last = out["history"][0]["loss"], out["history"][-1]["loss"]
+print(f"\nloss {first:.3f} -> {last:.3f} "
+      f"({'CONVERGING' if last < first else 'NOT CONVERGING'}), "
+      f"recovered from {out['recoveries']} injected failure(s), "
+      f"checkpoints in {ckpt_dir}")

@@ -1,0 +1,162 @@
+"""Fault-tolerant checkpointing: atomic commits, async writes, integrity
+hashes, and elastic restore (re-shard onto a different mesh/device count).
+
+Layout: <dir>/step_<k>/ {manifest.json, arrays.npz}; a checkpoint exists iff
+its directory was atomically renamed from a tmp name AND the manifest hash
+verifies — a torn write can never be mistaken for a valid checkpoint (the
+paper-scale requirement: at 1000+ nodes, *some* writer is always dying).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jax.numpy.bfloat16:
+            flat[key + "::bf16"] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: Optional[Dict] = None
+                    ) -> str:
+    """Synchronous atomic save. Returns the committed path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    npz_path = os.path.join(tmp, "arrays.npz")
+    np.savez(npz_path, **flat)
+    with open(npz_path, "rb") as f:
+        digest = hashlib.sha256(f.read()).hexdigest()
+    manifest = {
+        "step": step,
+        "sha256": digest,
+        "keys": sorted(flat.keys()),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def _treedef_from(tree):
+    return jax.tree_util.tree_structure(tree)
+
+
+def restore_checkpoint(path: str, like, shardings=None):
+    """Restore into the structure of `like`. `shardings`: optional pytree of
+    Shardings (elastic restore: a checkpoint written on one mesh loads onto
+    any other — placement is re-derived, not stored)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    npz_path = os.path.join(path, "arrays.npz")
+    with open(npz_path, "rb") as f:
+        digest = hashlib.sha256(f.read()).hexdigest()
+    if digest != manifest["sha256"]:
+        raise IOError(f"checkpoint {path} failed integrity check")
+    data = np.load(npz_path)
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pathk, leaf in flat_like[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in pathk)
+        if key + "::bf16" in data:
+            arr = data[key + "::bf16"].view(jax.numpy.bfloat16)
+        else:
+            arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(flat_like[1], leaves)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, manifest
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Async checkpointing off the training critical path + retention."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree, extra=None) -> None:
+        self.wait()  # one in flight at a time
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra)
+                self._gc()
+            except BaseException as e:  # pragma: no cover
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def latest(self) -> Optional[int]:
+        return latest_step(self.directory)
+
+    def path_for(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def restore_latest(self, like, shardings=None):
+        self.wait()
+        step = self.latest()
+        if step is None:
+            return None
+        tree, manifest = restore_checkpoint(self.path_for(step), like,
+                                            shardings)
+        return step, tree, manifest
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,230 @@
+"""Baseline orchestration strategies (§2.3): direct-pull, direct-push, and
+the sort-based MPC scheme. All share the vectorized execute/apply path with
+TD-Orch so the four engines produce bit-identical stores — only the cost
+profile (and thus load balance) differs, exactly the comparison in §4/Fig. 5.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+from .cost import CostAccumulator
+from .datastore import DataStore, TaskBatch
+from .engine import OrchestrationResult, _L0_HEADER
+from .mergeops import MergeOp, get_merge_op
+
+
+def _execute(tasks: TaskBatch, store: DataStore, f) -> Dict[str, np.ndarray]:
+    reads = tasks.read_keys >= 0
+    in_vals = np.zeros((tasks.n, store.value_width), dtype=store.values.dtype)
+    if reads.any():
+        in_vals[reads] = store.values[tasks.read_keys[reads]]
+    return f(tasks.contexts, in_vals)
+
+
+def _apply_writes(tasks, store, updates, merge: MergeOp, cost) -> None:
+    if updates is None:
+        return
+    updates = np.atleast_2d(np.asarray(updates))
+    if updates.shape[0] != tasks.n:
+        updates = updates.T
+    writes = tasks.write_keys >= 0
+    if not writes.any():
+        return
+    wk = tasks.write_keys[writes]
+    uniq, seg = np.unique(wk, return_inverse=True)
+    combined = merge.combine_segments(updates[writes], seg, uniq.size,
+                                      tasks.priority[writes])
+    store.values[uniq] = merge.apply(store.values[uniq], combined)
+    cost.work(store.home[uniq], 1.0)
+
+
+def _update_width(updates) -> int:
+    u = np.atleast_2d(np.asarray(updates))
+    return u.shape[1] if u.shape[0] != u.size else 1
+
+
+class DirectPullEngine:
+    """Dedup per machine, then fetch every needed chunk to the tasks (§2.3
+    "Direct Pull" — the RDMA pattern). Hot chunks swamp their home machine
+    with outbound B-word replies."""
+
+    def __init__(self, num_machines: int, work_per_task: float = 1.0):
+        self.P = int(num_machines)
+        self.work_per_task = work_per_task
+
+    def run_stage(self, tasks, store, f, write_back="add", return_results=False):
+        merge = get_merge_op(write_back)
+        cost = CostAccumulator(self.P)
+        B = store.chunk_words
+        reads = tasks.read_keys >= 0
+
+        cost.begin("pull_fetch")
+        if reads.any():
+            pair = tasks.origin[reads] * np.int64(store.num_keys + 1) + tasks.read_keys[reads]
+            uniq = np.unique(pair)
+            org = (uniq // np.int64(store.num_keys + 1)).astype(np.int64)
+            key = (uniq % np.int64(store.num_keys + 1)).astype(np.int64)
+            hm = store.home[key]
+            cost.send(org, hm, 2)  # request: key + reply address
+            cost.work(hm, 1.0)
+            cost.send(hm, org, B + 1)  # reply: the chunk
+            cost.tick(2)
+        cost.end()
+
+        cost.begin("pull_execute")
+        out = _execute(tasks, store, f)
+        cost.work(tasks.origin, self.work_per_task)
+        cost.end()
+        # results already live at the task's origin machine — no return traffic
+
+        cost.begin("pull_write_back")
+        updates = out.get("update")
+        if updates is not None:
+            writes = tasks.write_keys >= 0
+            if writes.any():
+                # RDMA semantics: every task issues its own remote write —
+                # no network-side combining, so a hot chunk's home machine
+                # receives one message per writer (the §2.3 skew pathology).
+                w_u = _update_width(updates)
+                hm = store.home[tasks.write_keys[writes]]
+                cost.send(tasks.origin[writes], hm, w_u + 1)
+                cost.work(hm, 1.0)
+                cost.tick()
+            _apply_writes(tasks, store, updates, merge, cost)
+        cost.end()
+
+        return OrchestrationResult(out.get("result"), cost.totals(),
+                                   tasks.origin.copy(), {})
+
+
+class DirectPushEngine:
+    """Ship every task context to its chunk's home machine (§2.3 "Direct
+    Push" — the RPC pattern). Hot chunks swamp their home with inbound σ-word
+    contexts *and* with the execution work itself."""
+
+    def __init__(self, num_machines: int, work_per_task: float = 1.0):
+        self.P = int(num_machines)
+        self.work_per_task = work_per_task
+
+    def run_stage(self, tasks, store, f, write_back="add", return_results=False):
+        merge = get_merge_op(write_back)
+        cost = CostAccumulator(self.P)
+        sigma = tasks.ctx_words
+        reads = tasks.read_keys >= 0
+        exec_site = tasks.origin.copy()
+        exec_site[reads] = store.home[tasks.read_keys[reads]]
+        wr_only = (~reads) & (tasks.write_keys >= 0)
+        exec_site[wr_only] = store.home[tasks.write_keys[wr_only]]
+
+        cost.begin("push_offload")
+        cost.send(tasks.origin, exec_site, sigma + _L0_HEADER)
+        cost.tick()
+        cost.end()
+
+        cost.begin("push_execute")
+        out = _execute(tasks, store, f)
+        cost.work(exec_site, self.work_per_task)
+        results = out.get("result")
+        if return_results and results is not None:
+            w_r = results.shape[1] if results.ndim > 1 else 1
+            cost.send(exec_site, tasks.origin, w_r + 1)
+            cost.tick()
+        cost.end()
+
+        cost.begin("push_write_back")
+        updates = out.get("update")
+        if updates is not None:
+            writes = tasks.write_keys >= 0
+            cross = writes & (store.home[np.maximum(tasks.write_keys, 0)] != exec_site)
+            if cross.any():
+                w_u = _update_width(updates)
+                pair = exec_site[cross] * np.int64(store.num_keys + 1) + tasks.write_keys[cross]
+                uniq = np.unique(pair)
+                org = (uniq // np.int64(store.num_keys + 1)).astype(np.int64)
+                key = (uniq % np.int64(store.num_keys + 1)).astype(np.int64)
+                cost.send(org, store.home[key], w_u + 1)
+                cost.tick()
+            _apply_writes(tasks, store, updates, merge, cost)
+        cost.end()
+
+        return OrchestrationResult(results, cost.totals(), exec_site, {})
+
+
+class SortBasedEngine:
+    """Theory-guided MPC scheme (§2.3): sort tasks by chunk address, broadcast
+    chunks to the sorted runs, execute, reverse. Asymptotically optimal but
+    pays ≥3 full passes over the task contexts (§3.6) — the constant factor
+    TD-Orch eliminates. Modeled after KaDiS-style sample sort with perfect
+    balance (generous to the baseline)."""
+
+    def __init__(self, num_machines: int, work_per_task: float = 1.0):
+        self.P = int(num_machines)
+        self.work_per_task = work_per_task
+
+    def run_stage(self, tasks, store, f, write_back="add", return_results=False):
+        merge = get_merge_op(write_back)
+        cost = CostAccumulator(self.P)
+        P = self.P
+        sigma = tasks.ctx_words
+        B = store.chunk_words
+        n = tasks.n
+
+        # ---- pass 1: global sample-sort of tasks by read key
+        cost.begin("sort_pass")
+        order = np.argsort(
+            np.where(tasks.read_keys >= 0, tasks.read_keys, tasks.write_keys),
+            kind="stable",
+        )
+        block = max(1, -(-n // P))
+        sorted_machine = np.empty(n, dtype=np.int64)
+        sorted_machine[order] = np.arange(n, dtype=np.int64) // block
+        cost.send(tasks.origin, sorted_machine, sigma + _L0_HEADER)
+        # sample-sort bookkeeping: splitter exchange ~ P·log n words each
+        cost.send(np.arange(P), np.zeros(P, dtype=np.int64), np.log2(max(n, 2)))
+        cost.work(sorted_machine, np.log2(max(n / P, 2)))  # local sort work
+        cost.tick(2)
+        cost.end()
+
+        # ---- pass 2: broadcast each chunk to every machine its run spans
+        cost.begin("sort_broadcast")
+        reads = tasks.read_keys >= 0
+        if reads.any():
+            pair = sorted_machine[reads] * np.int64(store.num_keys + 1) + tasks.read_keys[reads]
+            uniq = np.unique(pair)
+            mch = (uniq // np.int64(store.num_keys + 1)).astype(np.int64)
+            key = (uniq % np.int64(store.num_keys + 1)).astype(np.int64)
+            cost.send(store.home[key], mch, B + 1)
+            cost.tick()
+        cost.end()
+
+        cost.begin("sort_execute")
+        out = _execute(tasks, store, f)
+        cost.work(sorted_machine, self.work_per_task)
+        cost.end()
+
+        # ---- pass 3: reverse broadcast (write-backs) + reverse sort
+        cost.begin("sort_reverse")
+        updates = out.get("update")
+        if updates is not None:
+            writes = tasks.write_keys >= 0
+            if writes.any():
+                w_u = _update_width(updates)
+                pair = sorted_machine[writes] * np.int64(store.num_keys + 1) + tasks.write_keys[writes]
+                uniq = np.unique(pair)
+                mch = (uniq // np.int64(store.num_keys + 1)).astype(np.int64)
+                key = (uniq % np.int64(store.num_keys + 1)).astype(np.int64)
+                cost.send(mch, store.home[key], w_u + 1)
+            _apply_writes(tasks, store, updates, merge, cost)
+        results = out.get("result")
+        if return_results and results is not None:
+            w_r = results.shape[1] if results.ndim > 1 else 1
+            cost.send(sorted_machine, tasks.origin, w_r + 1)
+        else:
+            # tasks themselves are restored to their original order/machine
+            cost.send(sorted_machine, tasks.origin, sigma + _L0_HEADER)
+        cost.tick(2)
+        cost.end()
+
+        return OrchestrationResult(results, cost.totals(), sorted_machine, {})

@@ -1,0 +1,172 @@
+"""BSP cost accounting (§2.2, Appendix A).
+
+The BSP model charges a superstep by the *maximum* over machines of
+computation work and of communication volume (h-relation), which is why load
+balance — not just total volume — is the quantity TD-Orch optimizes
+(Definition 1: a stage with total work W and total communication I is
+load-balanced iff every machine incurs O(W/P) work and O(I/P) communication).
+
+Every engine in `repro.core` (TD-Orch and the three baselines) threads a
+`CostAccumulator` through its phases so benchmarks and property tests can
+read measured — not assumed — per-machine loads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PhaseCost:
+    """Per-machine costs of one named phase (may span several BSP rounds)."""
+
+    name: str
+    sent: np.ndarray  # words sent, per machine
+    recv: np.ndarray  # words received, per machine
+    compute: np.ndarray  # work units, per machine
+    rounds: int = 0
+
+    @property
+    def comm(self) -> np.ndarray:
+        # BSP h-relation uses max(in, out) per machine; we report the max of
+        # the two directions which upper-bounds either convention.
+        return np.maximum(self.sent, self.recv)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "phase": self.name,
+            "rounds": self.rounds,
+            "total_words": float(self.sent.sum()),
+            "max_comm": float(self.comm.max(initial=0.0)),
+            "mean_comm": float(self.comm.mean()) if self.comm.size else 0.0,
+            "max_compute": float(self.compute.max(initial=0.0)),
+            "mean_compute": float(self.compute.mean()) if self.compute.size else 0.0,
+        }
+
+
+class CostAccumulator:
+    """Accumulates per-machine sent/recv words and compute work by phase."""
+
+    def __init__(self, num_machines: int):
+        self.P = int(num_machines)
+        self.phases: List[PhaseCost] = []
+        self._open: Optional[PhaseCost] = None
+
+    # -- phase lifecycle ---------------------------------------------------
+    def begin(self, name: str) -> PhaseCost:
+        if self._open is not None:
+            raise RuntimeError(f"phase {self._open.name!r} still open")
+        self._open = PhaseCost(
+            name=name,
+            sent=np.zeros(self.P, dtype=np.float64),
+            recv=np.zeros(self.P, dtype=np.float64),
+            compute=np.zeros(self.P, dtype=np.float64),
+        )
+        return self._open
+
+    def end(self) -> PhaseCost:
+        if self._open is None:
+            raise RuntimeError("no open phase")
+        ph, self._open = self._open, None
+        self.phases.append(ph)
+        return ph
+
+    # -- recording ---------------------------------------------------------
+    def send(self, src: np.ndarray, dst: np.ndarray, words) -> None:
+        """Record messages src->dst of `words` words each. Self-sends free
+        (Fig. 2 dashed edges: a PM does not message itself)."""
+        ph = self._require()
+        src = np.asarray(src, dtype=np.int64).ravel()
+        dst = np.asarray(dst, dtype=np.int64).ravel()
+        words = np.broadcast_to(np.asarray(words, dtype=np.float64).ravel(), src.shape)
+        remote = src != dst
+        if not remote.any():
+            return
+        np.add.at(ph.sent, src[remote], words[remote])
+        np.add.at(ph.recv, dst[remote], words[remote])
+
+    def work(self, machine: np.ndarray, units) -> None:
+        ph = self._require()
+        machine = np.asarray(machine, dtype=np.int64).ravel()
+        units = np.broadcast_to(np.asarray(units, dtype=np.float64).ravel(), machine.shape)
+        np.add.at(ph.compute, machine, units)
+
+    def tick(self, rounds: int = 1) -> None:
+        self._require().rounds += rounds
+
+    def _require(self) -> PhaseCost:
+        if self._open is None:
+            raise RuntimeError("no open phase; call begin() first")
+        return self._open
+
+    # -- aggregation --------------------------------------------------------
+    def totals(self) -> "StageReport":
+        return StageReport(self.P, list(self.phases))
+
+
+@dataclasses.dataclass
+class StageReport:
+    """Aggregated cost report for one orchestration stage."""
+
+    P: int
+    phases: List[PhaseCost]
+
+    def _sum(self, field: str) -> np.ndarray:
+        out = np.zeros(self.P, dtype=np.float64)
+        for ph in self.phases:
+            out += getattr(ph, field)
+        return out
+
+    @property
+    def sent(self) -> np.ndarray:
+        return self._sum("sent")
+
+    @property
+    def recv(self) -> np.ndarray:
+        return self._sum("recv")
+
+    @property
+    def compute(self) -> np.ndarray:
+        return self._sum("compute")
+
+    @property
+    def comm(self) -> np.ndarray:
+        return np.maximum(self.sent, self.recv)
+
+    @property
+    def rounds(self) -> int:
+        return sum(ph.rounds for ph in self.phases)
+
+    # BSP communication time ~ max over machines (Definition 1 denominators)
+    @property
+    def comm_time(self) -> float:
+        return float(self.comm.max(initial=0.0))
+
+    @property
+    def compute_time(self) -> float:
+        return float(self.compute.max(initial=0.0))
+
+    def bsp_time(self, g: float = 1.0, t: float = 1.0, L: float = 0.0) -> float:
+        """Formal BSP cost g·h + t·w + L·rounds (Appendix A)."""
+        return g * self.comm_time + t * self.compute_time + L * self.rounds
+
+    def imbalance(self) -> Dict[str, float]:
+        """max/mean ratios — 1.0 is perfectly balanced (Definition 1)."""
+        comm, comp = self.comm, self.compute
+        return {
+            "comm": float(comm.max() / max(comm.mean(), 1e-12)),
+            "compute": float(comp.max() / max(comp.mean(), 1e-12)),
+        }
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "P": self.P,
+            "rounds": self.rounds,
+            "total_words": float(self.sent.sum()),
+            "comm_time": self.comm_time,
+            "compute_time": self.compute_time,
+            "comm_imbalance": self.imbalance()["comm"],
+            "compute_imbalance": self.imbalance()["compute"],
+        }

@@ -1,0 +1,105 @@
+"""Distributed data-chunk store (§2.2 "Data Storage").
+
+Data are partitioned into chunks of B words; each chunk lives on a hashed
+(≈ uniformly random) home machine. The store keeps the authoritative copy of
+every chunk value plus the placement map. For the BSP simulator the values
+live in one dense array indexed by chunk key; *placement* is what the cost
+model charges against.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import hashing
+
+
+@dataclasses.dataclass
+class DataStore:
+    """num_keys chunks, each `chunk_words` (=B) words wide, values float64.
+
+    `home[k]` is the physical machine storing chunk k. Values are the
+    authoritative copies; reads during a stage see the pre-stage snapshot
+    (BSP semantics) and write-backs land once at the end of the stage.
+    """
+
+    values: np.ndarray  # (num_keys, value_width)
+    home: np.ndarray  # (num_keys,) int64
+    chunk_words: int  # B — words charged when a chunk moves
+    P: int
+
+    @staticmethod
+    def create(
+        num_keys: int,
+        num_machines: int,
+        value_width: int = 1,
+        chunk_words: int | None = None,
+        init: float = 0.0,
+        salt: int = 0,
+        dtype=np.float64,
+    ) -> "DataStore":
+        values = np.full((num_keys, value_width), init, dtype=dtype)
+        home = hashing.chunk_home(np.arange(num_keys), num_machines, salt=salt)
+        B = int(chunk_words) if chunk_words is not None else int(value_width)
+        return DataStore(values=values, home=home, chunk_words=B, P=int(num_machines))
+
+    @property
+    def num_keys(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def value_width(self) -> int:
+        return self.values.shape[1]
+
+    def snapshot(self) -> np.ndarray:
+        return self.values.copy()
+
+    def storage_per_machine(self) -> np.ndarray:
+        out = np.zeros(self.P, dtype=np.int64)
+        np.add.at(out, self.home, 1)
+        return out
+
+
+@dataclasses.dataclass
+class TaskBatch:
+    """A batch of lambda-tasks (Fig. 1), vectorized.
+
+    Each task: reads chunk `read_keys[i]` (or none, -1), runs the stage's
+    lambda on (context, read value), optionally writes back to
+    `write_keys[i]` (default: same as read key). `origin[i]` is the machine
+    initially holding the task; `ctx_words` = σ. `priority` resolves
+    deterministic-overwrite races (Definition 2 case (iv)).
+    """
+
+    contexts: np.ndarray  # (n, ctx_width)
+    read_keys: np.ndarray  # (n,) int64, -1 = no read
+    origin: np.ndarray  # (n,) int64 machine ids
+    write_keys: np.ndarray | None = None  # (n,) int64, -1 = no write
+    priority: np.ndarray | None = None  # (n,) tie-break order
+    ctx_words: int | None = None  # σ; defaults to ctx width
+
+    def __post_init__(self):
+        n = self.contexts.shape[0]
+        self.read_keys = np.asarray(self.read_keys, dtype=np.int64)
+        self.origin = np.asarray(self.origin, dtype=np.int64)
+        if self.write_keys is None:
+            self.write_keys = self.read_keys.copy()
+        self.write_keys = np.asarray(self.write_keys, dtype=np.int64)
+        if self.priority is None:
+            self.priority = np.arange(n, dtype=np.int64)
+        if self.ctx_words is None:
+            self.ctx_words = int(self.contexts.shape[1]) if self.contexts.ndim > 1 else 1
+        for arr, nm in [(self.read_keys, "read_keys"), (self.origin, "origin"),
+                        (self.write_keys, "write_keys"), (self.priority, "priority")]:
+            if arr.shape[0] != n:
+                raise ValueError(f"{nm} length {arr.shape[0]} != n {n}")
+
+    @property
+    def n(self) -> int:
+        return self.contexts.shape[0]
+
+    @staticmethod
+    def even_origins(n: int, num_machines: int) -> np.ndarray:
+        """Round-robin initial task placement: Θ(n/P) per machine (§2.2)."""
+        return np.arange(n, dtype=np.int64) % num_machines

@@ -1,0 +1,74 @@
+"""Skew-aware vocab embedding — the KV-store case study (§4) transplanted
+into the LM stack.
+
+Token-id frequency is Zipfian (the paper's hot-chunk regime verbatim). On
+TPU, the standard vocab-parallel embedding's collective cost is dense
+(a psum of the (T, d) output) and therefore *skew-independent* — so unlike
+MoE dispatch, TD-Orch cannot reduce wire bytes here (DESIGN.md §4). What it
+CAN reduce is the *memory-system* cost: Phase-1 contention detection keeps
+the H hottest rows in a replicated cache (VMEM-resident on TPU, vs HBM
+gathers for cold rows), so the gather stream touches HBM only for the
+Zipf tail. This module implements that: exact results, hot-row hit-rate
+reported, cache refreshed from the live histogram every `refresh` steps.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .spmd import detect_contention, select_hot
+
+
+class EmbedCache(NamedTuple):
+    hot_ids: jnp.ndarray  # (H,) row ids
+    hot_rows: jnp.ndarray  # (H, d) replicated copies (VMEM-resident on TPU)
+    lookup: jnp.ndarray  # (V,) -> cache slot or -1
+    counts: jnp.ndarray  # (V,) running demand histogram (Phase 1 state)
+
+
+def init_cache(table: jnp.ndarray, num_hot: int) -> EmbedCache:
+    V, d = table.shape
+    return EmbedCache(
+        hot_ids=jnp.zeros((num_hot,), jnp.int32),
+        hot_rows=jnp.zeros((num_hot, d), table.dtype),
+        lookup=jnp.full((V,), -1, jnp.int32),
+        counts=jnp.zeros((V,), jnp.int32),
+    )
+
+
+def refresh_cache(table: jnp.ndarray, cache: EmbedCache,
+                  decay: float = 0.5) -> EmbedCache:
+    """Re-elect the hot set from the running histogram (Phase 2 pull: the
+    elected rows are replicated). Decay keeps the histogram adaptive."""
+    H = cache.hot_ids.shape[0]
+    hot_ids, lookup, _ = select_hot(cache.counts, H, min_count=1)
+    hot_rows = table[hot_ids]
+    counts = (cache.counts.astype(jnp.float32) * decay).astype(jnp.int32)
+    return EmbedCache(hot_ids=hot_ids.astype(jnp.int32), hot_rows=hot_rows,
+                      lookup=lookup, counts=counts)
+
+
+def embed_skew_aware(table: jnp.ndarray, ids: jnp.ndarray,
+                     cache: EmbedCache,
+                     axis_name: Optional[str] = None
+                     ) -> Tuple[jnp.ndarray, EmbedCache, jnp.ndarray]:
+    """Exact embedding lookup with hot-row caching.
+
+    Returns (embeddings, updated cache (histogram accumulated), hit_rate).
+    Cache hits read the replicated hot_rows buffer; misses gather from the
+    (vocab-sharded) table. Results are exact either way — the cache only
+    changes WHERE the bytes come from."""
+    flat = ids.reshape(-1)
+    counts = cache.counts + detect_contention(flat, cache.counts.shape[0],
+                                              axis_name)
+    slot = cache.lookup[flat]  # (T,) cache slot or -1
+    hit = slot >= 0
+    from_cache = cache.hot_rows[jnp.maximum(slot, 0)]
+    from_table = jnp.take(table, flat, axis=0)
+    out = jnp.where(hit[:, None], from_cache, from_table)
+    hit_rate = hit.mean()
+    out = out.reshape(*ids.shape, table.shape[1])
+    return out, cache._replace(counts=counts), hit_rate

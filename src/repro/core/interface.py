@@ -1,0 +1,50 @@
+"""The task-data orchestration interface (paper Fig. 1).
+
+    orchestration(tasks, f, store, write_back=...) -> OrchestrationResult
+
+`tasks` is a vectorized `TaskBatch` (InputPointers = read_keys, OutputPointers
+= write_keys, LocalContexts = contexts); `f` is the batched lambda
+(contexts, in_values) -> {"update": ..., "result": ...}; `write_back` names a
+merge-able ⊕ (Definition 2). The `engine` kwarg selects the scheduling
+strategy — "tdorch" (ours) or a §2.3 baseline — without touching user code,
+which is the point of the abstraction.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+from .baselines import DirectPullEngine, DirectPushEngine, SortBasedEngine
+from .datastore import DataStore, TaskBatch
+from .engine import OrchestrationResult, TDOrchEngine
+
+ENGINES = {
+    "tdorch": TDOrchEngine,
+    "push": DirectPushEngine,
+    "pull": DirectPullEngine,
+    "sort": SortBasedEngine,
+}
+
+
+def make_engine(name: str, num_machines: int, **opts):
+    try:
+        cls = ENGINES[name]
+    except KeyError:
+        raise KeyError(f"unknown engine {name!r}; available: {sorted(ENGINES)}") from None
+    return cls(num_machines, **opts)
+
+
+def orchestration(
+    tasks: TaskBatch,
+    f: Callable[[np.ndarray, np.ndarray], Dict[str, np.ndarray]],
+    store: DataStore,
+    write_back: str = "add",
+    *,
+    engine: str = "tdorch",
+    return_results: bool = False,
+    **engine_opts,
+) -> OrchestrationResult:
+    eng = make_engine(engine, store.P, **engine_opts)
+    return eng.run_stage(tasks, store, f, write_back=write_back,
+                         return_results=return_results)

@@ -1,0 +1,369 @@
+"""TD-Orch, production SPMD realization (jax.shard_map over the device mesh).
+
+This is the same four-phase structure as `engine.py`, re-architected for TPU
+collectives (see DESIGN.md §3 — hardware adaptation):
+
+  Phase 1 (contention detection): per-shard histogram of requested items +
+    one `psum` — on TPU an all-reduce *is* the balanced aggregation tree the
+    paper builds by hand, so counts ride it directly.
+  Phase 2 (co-location):
+    push — cold items' task payloads route to owner shards via a sorted,
+    capacity-bounded `all_to_all` (the TPU-idiomatic form of message
+    aggregation: static buffers play the meta-task level cap C);
+    pull — the ≤H hottest items' *data* is replicated to every shard via a
+    masked `psum` (the C-ary broadcast tree, realized as the bandwidth-
+    optimal ring the hardware provides).
+  Phase 3: local grouped compute (`lax.ragged_dot` here; the Pallas grouped
+    GEMM in `repro.kernels.moe_gemm` on the optimized path).
+  Phase 4: merge-able combine — weighted adds pre-combined on-shard (⊗)
+    before the return `all_to_all`, applied once per output row (⊙).
+
+The flagship application is MoE expert dispatch (tokens = tasks, experts =
+data chunks, routing skew = data hot spots): `moe_push_pull` vs the two §2.3
+baselines `moe_direct_push` (classic expert-parallel dispatch with capacity
+drops) and `moe_direct_pull` (replicate every expert).
+
+Everything is written per-shard (to be wrapped in shard_map); pass
+``axis_name=None`` to run the identical code on one device (tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# Phase 1: contention detection
+# ---------------------------------------------------------------------------
+def detect_contention(item_ids: jnp.ndarray, num_items: int,
+                      axis_name: Optional[str] = None) -> jnp.ndarray:
+    """Global reference count per data item (§3.1). One histogram + one
+    psum: the communication forest for *counts* degenerates to the
+    hardware's all-reduce tree."""
+    counts = jnp.zeros(num_items, dtype=jnp.int32).at[item_ids.reshape(-1)].add(
+        1, mode="drop"
+    )
+    if axis_name is not None:
+        counts = lax.psum(counts, axis_name)
+    return counts
+
+
+def select_hot(counts: jnp.ndarray, num_hot: int, min_count: int = 1):
+    """Top-`num_hot` items by demand, thresholded. Returns (hot_ids (H,),
+    rank lookup (E,) with -1 = cold). Static H keeps shapes jit-stable —
+    the SPMD analogue of the meta-task set's bounded size."""
+    num_items = counts.shape[0]
+    top_counts, hot_ids = lax.top_k(counts, num_hot)
+    valid = top_counts >= min_count
+    # invalid slots point at item 0 but are masked out of the lookup
+    lookup = jnp.full((num_items,), -1, dtype=jnp.int32)
+    ranks = jnp.arange(num_hot, dtype=jnp.int32)
+    lookup = lookup.at[hot_ids].set(jnp.where(valid, ranks, -1), mode="drop")
+    return hot_ids, lookup, valid
+
+
+# ---------------------------------------------------------------------------
+# sorted capacity-bounded routing (the push path's meta-structure)
+# ---------------------------------------------------------------------------
+class Routing(NamedTuple):
+    order: jnp.ndarray  # sort order over assignments
+    dest: jnp.ndarray  # destination bucket per sorted assignment
+    pos: jnp.ndarray  # position within bucket per sorted assignment
+    keep: jnp.ndarray  # fits under capacity
+
+
+def bucket_routing(dest: jnp.ndarray, num_buckets: int, capacity: int,
+                   active: jnp.ndarray) -> Routing:
+    """Stable-sort assignments by destination bucket and compute each one's
+    slot; slots ≥ capacity are dropped (push-side overflow — rare once the
+    hot items are pulled instead, which is the point of push-pull)."""
+    big = jnp.asarray(num_buckets, dest.dtype)
+    key = jnp.where(active, dest, big)  # inactive rows sort to the end
+    order = jnp.argsort(key, stable=True)
+    key_sorted = key[order]
+    # position within each bucket = index − start(bucket)
+    counts = jnp.zeros(num_buckets + 1, jnp.int32).at[key_sorted].add(1)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(dest.shape[0], dtype=jnp.int32) - starts[key_sorted]
+    keep = (key_sorted < num_buckets) & (pos < capacity)
+    return Routing(order=order, dest=key_sorted, pos=pos, keep=keep)
+
+
+def scatter_to_buckets(rows: jnp.ndarray, routing: Routing, num_buckets: int,
+                       capacity: int, fill=0) -> jnp.ndarray:
+    """(A, d) rows -> (num_buckets, capacity, d) send buffer."""
+    d_shape = rows.shape[1:]
+    buf = jnp.full((num_buckets, capacity) + d_shape, fill, dtype=rows.dtype)
+    src = rows[routing.order]
+    return buf.at[routing.dest, routing.pos].set(
+        jnp.where(routing.keep.reshape((-1,) + (1,) * len(d_shape)), src, fill),
+        mode="drop",
+    )
+
+
+def gather_from_buckets(buf: jnp.ndarray, routing: Routing,
+                        num_assign: int) -> jnp.ndarray:
+    """Inverse of scatter_to_buckets: (B, cap, d) -> (A, d) in original
+    assignment order (dropped slots read back as zeros)."""
+    d_shape = buf.shape[2:]
+    got = buf[routing.dest, routing.pos]
+    got = jnp.where(routing.keep.reshape((-1,) + (1,) * len(d_shape)), got, 0)
+    inv = jnp.zeros_like(routing.order).at[routing.order].set(
+        jnp.arange(routing.order.shape[0]))
+    return got[inv]
+
+
+# ---------------------------------------------------------------------------
+# grouped expert compute (Phase 3)
+# ---------------------------------------------------------------------------
+def grouped_swiglu(xs: jnp.ndarray, w_in: jnp.ndarray, w_out: jnp.ndarray,
+                   group_sizes: jnp.ndarray, impl: str = "ragged",
+                   capacity_mult: float = 2.0) -> jnp.ndarray:
+    """Grouped SwiGLU FFN: xs (M, d) sorted by group; w_in (G, d, 2f),
+    w_out (G, f, d).
+
+    impl="ragged": lax.ragged_dot (exact; on backends without native
+    support XLA lowers it DENSELY — every token × every expert — which the
+    roofline's useful_ratio flags; the Pallas kernel in
+    repro.kernels.moe_gemm is the tuned TPU form).
+
+    impl="binned": capacity-binned batched GEMM (Switch-style): tokens
+    scatter into (G, cap, d) bins, two (G,·,·)×(G,·,·) batched matmuls.
+    FLOPs = cap·G ≈ capacity_mult·M — near-useful. Rows beyond a bin's
+    capacity produce zeros (combine weights drop them); TD-Orch's hot-expert
+    pull is precisely what keeps bins from overflowing under skew, which is
+    what makes this MXU-friendly form safe (§Perf, pair C)."""
+    if impl == "ragged":
+        h = lax.ragged_dot(xs, w_in, group_sizes)
+        gate, up = jnp.split(h, 2, axis=-1)
+        act = jax.nn.silu(gate) * up
+        return lax.ragged_dot(act, w_out, group_sizes)
+    M, d = xs.shape
+    G = w_in.shape[0]
+    cap = max(8, int(capacity_mult * M / G))
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(group_sizes)[:-1].astype(jnp.int32)])
+    rows = jnp.arange(M, dtype=jnp.int32)
+    gid = jnp.searchsorted(jnp.cumsum(group_sizes), rows, side="right"
+                           ).astype(jnp.int32)
+    gid = jnp.clip(gid, 0, G - 1)
+    pos = rows - starts[gid]
+    keep = (pos < cap) & (rows < jnp.sum(group_sizes))
+    bins = jnp.zeros((G, cap, d), xs.dtype).at[
+        jnp.where(keep, gid, G), jnp.where(keep, pos, 0)].set(
+        xs, mode="drop")
+    h = jnp.einsum("gcd,gdf->gcf", bins, w_in)
+    gate, up = jnp.split(h, 2, axis=-1)
+    act = jax.nn.silu(gate) * up
+    out_bins = jnp.einsum("gcf,gfd->gcd", act, w_out)
+    out = out_bins[jnp.where(keep, gid, 0), jnp.where(keep, pos, 0)]
+    return jnp.where(keep[:, None], out, 0.0)
+
+
+def _sort_by_group(ids: jnp.ndarray, num_groups: int):
+    order = jnp.argsort(ids, stable=True)
+    sizes = jnp.zeros(num_groups + 1, jnp.int32).at[ids].add(1)[:num_groups]
+    return order, sizes
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch engines
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MoEDispatchConfig:
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    num_hot: int = 0  # H: experts served by pull/replication (0 = pure push)
+    hot_min_count: int = 1
+    axis_name: Optional[str] = None
+    ep_size: int = 1  # number of expert-parallel shards on axis_name
+    gemm_impl: str = "ragged"  # ragged | binned (see grouped_swiglu)
+
+
+class MoEAux(NamedTuple):
+    dropped_assignments: jnp.ndarray  # scalar
+    expert_counts: jnp.ndarray  # (E,) global demand (Phase-1 histogram)
+    hot_ids: jnp.ndarray  # (H,) or (0,)
+
+
+def _capacity(cfg: MoEDispatchConfig, num_tokens: int) -> int:
+    # per-destination-shard send capacity for the all_to_all buffers
+    per_shard = num_tokens * cfg.top_k / max(cfg.ep_size, 1)
+    return max(8, int(per_shard * cfg.capacity_factor))
+
+
+def moe_push_pull(
+    x: jnp.ndarray,  # (T, d) local tokens
+    topk_idx: jnp.ndarray,  # (T, k) expert assignment
+    topk_gate: jnp.ndarray,  # (T, k) combine weights
+    w_in: jnp.ndarray,  # (E_local, d, 2f)
+    w_out: jnp.ndarray,  # (E_local, f, d)
+    cfg: MoEDispatchConfig,
+):
+    """TD-Orch push-pull MoE dispatch (per-shard body).
+
+    Cold experts: tokens pushed to the owner shard (all_to_all), computed
+    there, pushed back, merge-combined. Hot experts: weights pulled
+    (replicated via masked psum) and their tokens computed locally — no
+    token ever crosses the network for a hot expert, and no capacity drop
+    can hit it. This is exactly §3.3's decision rule with C→capacity.
+    """
+    T, d = x.shape
+    k = cfg.top_k
+    E, ep = cfg.num_experts, cfg.ep_size
+    e_local = E // ep
+    axis = cfg.axis_name
+    my_shard = lax.axis_index(axis) if axis is not None else 0
+    A = T * k
+    flat_e = topk_idx.reshape(A).astype(jnp.int32)
+    flat_g = topk_gate.reshape(A)
+    token_of = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+
+    # ---------------- Phase 1: contention detection -----------------------
+    counts = detect_contention(flat_e, E, axis)
+
+    y = jnp.zeros((T, d), dtype=x.dtype)
+
+    # ---------------- pull path: hot experts ------------------------------
+    if cfg.num_hot > 0:
+        hot_ids, lookup, valid = select_hot(counts, cfg.num_hot,
+                                            cfg.hot_min_count)
+        H = cfg.num_hot
+        # pull the hot experts' weights: every shard contributes the hot
+        # experts it owns into a zero buffer; psum = C-ary broadcast tree
+        local_eids = my_shard * e_local + jnp.arange(e_local)
+        local_rank = lookup[local_eids]  # (E_local,) -1 if not hot
+        contrib_mask = (local_rank >= 0)
+        hot_w_in = jnp.zeros((H,) + w_in.shape[1:], w_in.dtype)
+        hot_w_out = jnp.zeros((H,) + w_out.shape[1:], w_out.dtype)
+        safe_rank = jnp.where(contrib_mask, local_rank, 0)
+        hot_w_in = hot_w_in.at[safe_rank].add(
+            jnp.where(contrib_mask[:, None, None], w_in, 0))
+        hot_w_out = hot_w_out.at[safe_rank].add(
+            jnp.where(contrib_mask[:, None, None], w_out, 0))
+        if axis is not None:
+            hot_w_in = lax.psum(hot_w_in, axis)
+            hot_w_out = lax.psum(hot_w_out, axis)
+        # local grouped compute over hot assignments
+        assign_rank = lookup[flat_e]  # (A,) -1 = cold
+        is_hot = assign_rank >= 0
+        hot_sort_key = jnp.where(is_hot, assign_rank, H)
+        order, sizes = _sort_by_group(hot_sort_key.astype(jnp.int32), H)
+        xs = x[token_of[order]]
+        out = grouped_swiglu(xs, hot_w_in, hot_w_out, sizes,
+                             impl=cfg.gemm_impl)
+        # Phase 4 (⊗ on-shard): weighted-add combine per token
+        gates = jnp.where(is_hot, flat_g, 0.0)[order]
+        y = y.at[token_of[order]].add(out * gates[:, None])
+    else:
+        hot_ids = jnp.zeros((0,), jnp.int32)
+        is_hot = jnp.zeros((A,), bool)
+
+    # ---------------- push path: cold experts -----------------------------
+    cap = _capacity(cfg, T)
+    owner = flat_e // e_local
+    routing = bucket_routing(owner, ep, cap, active=~is_hot)
+    send_x = scatter_to_buckets(x[token_of], routing, ep, cap)  # (ep,cap,d)
+    meta = jnp.stack(
+        [flat_e.astype(jnp.float32), jnp.ones((A,), jnp.float32)], axis=1)
+    send_meta = scatter_to_buckets(meta, routing, ep, cap)  # (ep,cap,2)
+
+    if axis is not None and ep > 1:
+        recv_x = lax.all_to_all(send_x, axis, 0, 0)
+        recv_meta = lax.all_to_all(send_meta, axis, 0, 0)
+    else:
+        recv_x, recv_meta = send_x, send_meta
+
+    r_e = recv_meta[..., 0].astype(jnp.int32).reshape(ep * cap)
+    r_valid = recv_meta[..., 1].reshape(ep * cap) > 0.5
+    r_local = jnp.where(r_valid, r_e - my_shard * e_local, e_local)
+    r_local = jnp.clip(r_local, 0, e_local)  # invalid -> sentinel group
+    order2, sizes2 = _sort_by_group(r_local.astype(jnp.int32), e_local)
+    xs2 = recv_x.reshape(ep * cap, d)[order2]
+    out2 = grouped_swiglu(xs2, w_in, w_out, sizes2, impl=cfg.gemm_impl)
+    inv2 = jnp.zeros_like(order2).at[order2].set(
+        jnp.arange(order2.shape[0]))
+    out2 = out2[inv2].reshape(ep, cap, d)
+
+    if axis is not None and ep > 1:
+        back = lax.all_to_all(out2, axis, 0, 0)
+    else:
+        back = out2
+    y_assign = gather_from_buckets(back, routing, A)  # (A, d), original order
+    cold_gate = jnp.where(is_hot | ~_kept_mask(routing), 0.0, flat_g)
+    y = y.at[token_of].add(y_assign * cold_gate[:, None])
+
+    dropped = jnp.sum((~is_hot) & ~_kept_mask(routing))
+    if axis is not None:
+        dropped = lax.psum(dropped, axis)
+    return y, MoEAux(dropped_assignments=dropped, expert_counts=counts,
+                     hot_ids=hot_ids)
+
+
+def _kept_mask(routing: Routing) -> jnp.ndarray:
+    """Per-assignment (original order) mask of slots that fit capacity."""
+    inv = jnp.zeros_like(routing.order).at[routing.order].set(
+        jnp.arange(routing.order.shape[0]))
+    return routing.keep[inv]
+
+
+def moe_direct_push(x, topk_idx, topk_gate, w_in, w_out,
+                    cfg: MoEDispatchConfig):
+    """§2.3 Direct Push baseline = classic expert parallelism: every token
+    crosses to its expert's owner; hot experts overflow capacity and DROP."""
+    cold_cfg = dataclasses.replace(cfg, num_hot=0)
+    return moe_push_pull(x, topk_idx, topk_gate, w_in, w_out, cold_cfg)
+
+
+def moe_direct_pull(x, topk_idx, topk_gate, w_in, w_out,
+                    cfg: MoEDispatchConfig):
+    """§2.3 Direct Pull baseline: replicate EVERY expert's weights to every
+    shard (all_gather) and compute locally — no drops, but weight traffic is
+    paid regardless of demand (prohibitive as E grows)."""
+    E, ep = cfg.num_experts, cfg.ep_size
+    axis = cfg.axis_name
+    if axis is not None and ep > 1:
+        all_w_in = lax.all_gather(w_in, axis, axis=0, tiled=True)
+        all_w_out = lax.all_gather(w_out, axis, axis=0, tiled=True)
+    else:
+        all_w_in, all_w_out = w_in, w_out
+    T, d = x.shape
+    k = cfg.top_k
+    A = T * k
+    flat_e = topk_idx.reshape(A).astype(jnp.int32)
+    flat_g = topk_gate.reshape(A)
+    token_of = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    order, sizes = _sort_by_group(flat_e, E)
+    out = grouped_swiglu(x[token_of[order]], all_w_in, all_w_out, sizes,
+                         impl=cfg.gemm_impl)
+    y = jnp.zeros((T, d), x.dtype).at[token_of[order]].add(
+        out * flat_g[order][:, None])
+    counts = detect_contention(flat_e, E, axis)
+    return y, MoEAux(dropped_assignments=jnp.zeros((), jnp.int32),
+                     expert_counts=counts, hot_ids=jnp.zeros((0,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# dense reference (oracle; no distribution, no capacity)
+# ---------------------------------------------------------------------------
+def moe_reference(x, topk_idx, topk_gate, w_in_full, w_out_full):
+    """Exact dense MoE: every assignment computed, no drops. Oracle for
+    engine equivalence tests (w_*_full hold all E experts)."""
+    T, d = x.shape
+    k = topk_idx.shape[1]
+    E = w_in_full.shape[0]
+    A = T * k
+    flat_e = topk_idx.reshape(A).astype(jnp.int32)
+    flat_g = topk_gate.reshape(A)
+    token_of = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    order, sizes = _sort_by_group(flat_e, E)
+    out = grouped_swiglu(x[token_of[order]], w_in_full, w_out_full, sizes)
+    return jnp.zeros((T, d), x.dtype).at[token_of[order]].add(
+        out * flat_g[order][:, None])

@@ -1,0 +1,3 @@
+from .synthetic import SyntheticLMStream, make_batch_iterator
+
+__all__ = ["SyntheticLMStream", "make_batch_iterator"]

@@ -1,0 +1,22 @@
+# Case Study II (§5): TDO-GP — distributed graph processing on TD-Orch.
+# Ingestion-time orchestration (source/destination trees), DistVertexSubset,
+# sparse/dense DistEdgeMap, and the five paper algorithms (BFS, SSSP, BC,
+# CC, PR) with work-efficient bounds (Table 1).
+from .generators import (
+    Graph,
+    barabasi_albert,
+    erdos_renyi,
+    grid_2d,
+    star_graph,
+)
+from .partition import OrchestratedGraph, ingest
+from .vertex_subset import DistVertexSubset
+from .distedgemap import dist_edge_map, EdgeMapStats
+from .algorithms import bfs, bc, cc, pagerank, sssp
+
+__all__ = [
+    "Graph", "barabasi_albert", "erdos_renyi", "grid_2d", "star_graph",
+    "OrchestratedGraph", "ingest",
+    "DistVertexSubset", "dist_edge_map", "EdgeMapStats",
+    "bfs", "bc", "cc", "pagerank", "sssp",
+]

@@ -1,0 +1,220 @@
+"""The five §5 graph algorithms on DISTEDGEMAP: BFS, SSSP, BC, CC, PR.
+
+Each follows the paper's pseudocode (Algorithm 2 for BFS, Algorithm 3 for
+BC) and inherits TDO-GP's bounds (Table 1): work-efficient O((n+m)/P·…)
+computation with communication a log_{n/P}P factor above it, because every
+round is a TD-Orch-orchestrated stage over the ingestion-time trees.
+
+All drivers return (values, RunInfo) where RunInfo carries per-round
+EdgeMapStats so benchmarks can report comm/compute/overhead breakdowns
+(Fig. 10) without re-instrumenting the algorithms.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from .distedgemap import EdgeMapStats, dist_edge_map
+from .partition import OrchestratedGraph
+from .vertex_subset import DistVertexSubset
+
+
+@dataclasses.dataclass
+class RunInfo:
+    rounds: int
+    stats: List[EdgeMapStats]
+
+    @property
+    def total_edges_processed(self) -> int:
+        return sum(s.active_edges for s in self.stats)
+
+    def comm_time(self) -> float:
+        return sum(s.report.comm_time for s in self.stats if s.report)
+
+    def compute_time(self) -> float:
+        return sum(s.report.compute_time for s in self.stats if s.report)
+
+    def bsp_rounds(self) -> int:
+        return sum(s.report.rounds for s in self.stats if s.report)
+
+
+def _opts(kw):
+    keys = ("account", "dedup", "fast_local", "force_mode", "threshold_frac",
+            "per_edge_comm")
+    return {k: kw[k] for k in keys if k in kw}
+
+
+# ---------------------------------------------------------------------------
+def bfs(og: OrchestratedGraph, source: int, **kw):
+    """Algorithm 2: frontier BFS; merge = max (any writer wins — idempotent
+    since every writer this round carries the same ROUND value)."""
+    n = og.n
+    dist = np.full(n, -1, dtype=np.int64)
+    dist[source] = 0
+    frontier = DistVertexSubset.single(n, source)
+    stats: List[EdgeMapStats] = []
+    rnd = 0
+    while not frontier.is_empty:
+        rnd += 1
+
+        def f(s, d, w, _r=rnd):
+            return np.full(s.size, float(_r))
+
+        def wb(vs, agg):
+            fresh = dist[vs] == -1
+            dist[vs[fresh]] = agg[fresh].astype(np.int64)
+            return fresh
+
+        frontier, st = dist_edge_map(
+            og, frontier, f, wb, "max",
+            filter_dst=lambda d: dist[d] == -1, **_opts(kw))
+        stats.append(st)
+    return dist, RunInfo(rnd, stats)
+
+
+# ---------------------------------------------------------------------------
+def sssp(og: OrchestratedGraph, source: int, **kw):
+    """Frontier Bellman–Ford (nonnegative weights); merge = min."""
+    n = og.n
+    if og.graph.weights is None:
+        raise ValueError("sssp needs weights; call Graph.with_weights()")
+    dist = np.full(n, np.inf)
+    dist[source] = 0.0
+    frontier = DistVertexSubset.single(n, source)
+    stats: List[EdgeMapStats] = []
+    rnd = 0
+    while not frontier.is_empty:
+        rnd += 1
+
+        def f(s, d, w):
+            return dist[s] + w
+
+        def wb(vs, agg):
+            better = agg < dist[vs]
+            dist[vs[better]] = agg[better]
+            return better
+
+        frontier, st = dist_edge_map(og, frontier, f, wb, "min", **_opts(kw))
+        stats.append(st)
+        if rnd > og.n + 1:  # negative-cycle guard (shouldn't trigger)
+            raise RuntimeError("SSSP failed to converge")
+    return dist, RunInfo(rnd, stats)
+
+
+# ---------------------------------------------------------------------------
+def cc(og: OrchestratedGraph, **kw):
+    """Connected components by min-label propagation; merge = min."""
+    n = og.n
+    labels = np.arange(n, dtype=np.float64)
+    frontier = DistVertexSubset.full(n)
+    stats: List[EdgeMapStats] = []
+    rnd = 0
+    while not frontier.is_empty:
+        rnd += 1
+
+        def f(s, d, w):
+            return labels[s]
+
+        def wb(vs, agg):
+            better = agg < labels[vs]
+            labels[vs[better]] = agg[better]
+            return better
+
+        frontier, st = dist_edge_map(og, frontier, f, wb, "min", **_opts(kw))
+        stats.append(st)
+    return labels.astype(np.int64), RunInfo(rnd, stats)
+
+
+# ---------------------------------------------------------------------------
+def pagerank(og: OrchestratedGraph, alpha: float = 0.85, tol: float = 1e-8,
+             max_iter: int = 100, **kw):
+    """Power iteration; merge = add. Dangling mass redistributed uniformly
+    (networkx convention, so oracles agree exactly)."""
+    n = og.n
+    deg = og.out_degree().astype(np.float64)
+    pr = np.full(n, 1.0 / n)
+    dangling = deg == 0
+    frontier = DistVertexSubset.full(n)
+    stats: List[EdgeMapStats] = []
+    it = 0
+    for it in range(1, max_iter + 1):
+        contrib = np.divide(pr, deg, out=np.zeros(n), where=deg > 0)
+        nxt = np.full(n, (1.0 - alpha) / n + alpha * pr[dangling].sum() / n)
+
+        def f(s, d, w):
+            return contrib[s]
+
+        def wb(vs, agg):
+            nxt[vs] += alpha * agg
+            return np.ones(vs.size, dtype=bool)
+
+        _, st = dist_edge_map(og, frontier, f, wb, "add",
+                              force_mode=kw.pop("force_mode", "dense"), **_opts(kw))
+        stats.append(st)
+        delta = np.abs(nxt - pr).sum()
+        pr = nxt
+        if delta < tol * n:
+            break
+    return pr, RunInfo(it, stats)
+
+
+# ---------------------------------------------------------------------------
+def bc(og: OrchestratedGraph, source: int, **kw):
+    """Betweenness centrality from one root (Algorithm 3): forward
+    level-synchronous σ accumulation, then backward dependency propagation
+    using the 1/σ trick (lines 27–34): δ_v = σ_v·φ_v − 1."""
+    n = og.n
+    num_paths = np.zeros(n)
+    rounds_arr = np.zeros(n, dtype=np.int64)
+    num_paths[source] = 1.0
+    rounds_arr[source] = 1
+    frontier = DistVertexSubset.single(n, source)
+    frontiers = {1: frontier}
+    stats: List[EdgeMapStats] = []
+    rnd = 1
+    # ---- forward pass
+    while not frontier.is_empty:
+        rnd += 1
+
+        def f(s, d, w):
+            return num_paths[s]
+
+        def wb(vs, agg, _r=rnd):
+            fresh = rounds_arr[vs] == 0
+            num_paths[vs[fresh]] += agg[fresh]
+            rounds_arr[vs[fresh]] = _r
+            return fresh
+
+        frontier, st = dist_edge_map(
+            og, frontier, f, wb, "add",
+            filter_dst=lambda d: rounds_arr[d] == 0, **_opts(kw))
+        stats.append(st)
+        if not frontier.is_empty:
+            frontiers[rnd] = frontier
+    last = max(frontiers)
+    # ---- backward pass (lines 27–32)
+    visited = rounds_arr > 0
+    phi = np.zeros(n)
+    phi[visited] = 1.0 / num_paths[visited]
+    for r in range(last, 1, -1):
+        fr = frontiers[r]
+
+        def f(s, d, w):
+            return phi[s]
+
+        def wb(vs, agg, _r=r):
+            sel = rounds_arr[vs] == _r - 1
+            phi[vs[sel]] += agg[sel]
+            return sel
+
+        _, st = dist_edge_map(
+            og, fr, f, wb, "add",
+            filter_dst=lambda d, _r=r: rounds_arr[d] == _r - 1, **_opts(kw))
+        stats.append(st)
+    # ---- line 34: δ_v = σ_v·φ_v − 1 on visited vertices (0 elsewhere)
+    delta = np.zeros(n)
+    delta[visited] = phi[visited] * num_paths[visited] - 1.0
+    delta[source] = 0.0
+    return delta, RunInfo(rnd + last - 1, stats)

@@ -1,0 +1,26 @@
+"""Jit'd public wrapper: Pallas flash attention on TPU, interpret-mode Pallas
+for CPU validation, jnp oracle as functional fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "backend",
+                                             "block_q", "block_k"))
+def attention(q, k, v, *, causal: bool = True, backend: str = "auto",
+              block_q: int = 128, block_k: int = 128):
+    """backend: 'pallas' (TPU), 'interpret' (CPU validation of the kernel
+    body), 'ref' (jnp oracle), 'auto' (pallas on TPU else ref)."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return attention_ref(q, k, v, causal=causal)
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k,
+                           interpret=(backend == "interpret"))

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """q: (B, S, H, hd); k/v: (B, T, KV, hd) with H % KV == 0.
+    Returns (B, S, H, hd). f32 softmax accumulation."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qf, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        scores = jnp.where(mask[None, None, None], scores, -2.0e38)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)

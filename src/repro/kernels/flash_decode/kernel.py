@@ -1,0 +1,100 @@
+"""Flash-decode: single-token attention against a long KV cache, Pallas TPU.
+
+The decode roofline is memory-bound (the cache stream IS the step time), so
+the kernel's job is to stream K/V tiles through VMEM exactly once at full
+HBM bandwidth while the online-softmax state (m, l, acc — a few KiB) stays
+in scratch. Grid (B, KV, nT) with the cache-tile dimension sequential;
+invalid positions (≥ length) are masked via the scalar-prefetched length.
+
+This is the single-chip cell of the sequence-sharded decode: across chips,
+GSPMD combines per-shard partial softmax (m, l, acc) with the same algebra
+(see models/attention.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, block_t: int, groups: int):
+    ti = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bt, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    hd = q.shape[-1]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bt)
+    s = s * (hd ** -0.5)
+    pos = ti * block_t + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ti == nt - 1)
+    def _done():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, ...] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                 length, *, block_t: int = 512, interpret: bool = False
+                 ) -> jnp.ndarray:
+    """q: (B, H, hd); k/v_cache: (B, T, KV, hd); length: scalar valid
+    prefix. Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    block_t = min(block_t, T)
+    assert T % block_t == 0
+    q4 = q.reshape(B, KV, G, hd)
+    kt = k_cache.transpose(0, 2, 1, 3)  # (B, KV, T, hd)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+    grid = (B, KV, T // block_t)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_t=block_t, groups=G),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd), lambda b, k, t, L: (b, k, 0, 0)),
+                pl.BlockSpec((1, 1, block_t, hd),
+                             lambda b, k, t, L: (b, k, t, 0)),
+                pl.BlockSpec((1, 1, block_t, hd),
+                             lambda b, k, t, L: (b, k, t, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd),
+                                   lambda b, k, t, L: (b, k, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, hd), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(length, q4, kt, vt)
+    return out.reshape(B, H, hd)

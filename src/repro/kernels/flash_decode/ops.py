@@ -1,0 +1,20 @@
+"""Public flash-decode op with backend selection."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_decode
+from .ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "block_t"))
+def decode_attention(q, k_cache, v_cache, length, *, backend: str = "auto",
+                     block_t: int = 512):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return decode_attention_ref(q, k_cache, v_cache, length)
+    return flash_decode(q, k_cache, v_cache, length, block_t=block_t,
+                        interpret=(backend == "interpret"))

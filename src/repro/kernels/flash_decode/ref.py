@@ -1,0 +1,19 @@
+"""Oracle for single-token GQA decode attention over a KV cache."""
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, length):
+    """q: (B, H, hd); k/v_cache: (B, T, KV, hd); length: #valid positions.
+    Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qf, k_cache.astype(jnp.float32))
+    s = s / jnp.sqrt(hd).astype(jnp.float32)
+    mask = jnp.arange(T)[None, None, None, :] < length
+    s = jnp.where(mask, s, -2.0e38)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", w, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,59 @@
+"""Contention-detection histogram (TD-Orch Phase 1), Pallas TPU.
+
+Streams id tiles through VMEM and accumulates the full (num_bins,) count
+vector in a VMEM scratch: counts += Σ_i onehot(ids_i), computed as a
+(block_n × bins) comparison + column-sum — vector-unit friendly, no scatter.
+Sequential grid; bins capped by VMEM (fine for experts/buckets; vocab-scale
+histograms go through the ref path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _hist_kernel(ids_ref, o_ref, acc_ref, *, num_bins: int, block_n: int):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ids = ids_ref[...]  # (block_n,)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (block_n, num_bins), 1)
+    onehot = (ids[:, None] == bins).astype(jnp.int32)
+    acc_ref[...] += jnp.sum(onehot, axis=0)
+
+    @pl.when(i == n - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+def histogram(ids: jnp.ndarray, num_bins: int, *, block_n: int = 1024,
+              interpret: bool = False) -> jnp.ndarray:
+    """ids: (N,) int32 in [0, num_bins) (out-of-range ids are dropped by
+    padding with num_bins). Returns (num_bins,) int32 counts."""
+    ids = ids.reshape(-1).astype(jnp.int32)
+    N = ids.shape[0]
+    block_n = min(block_n, max(N, 8))
+    pad = (-N) % block_n
+    if pad:
+        ids = jnp.concatenate([ids, jnp.full((pad,), num_bins, jnp.int32)])
+    bins_pad = ((num_bins + 127) // 128) * 128  # lane alignment
+    out = pl.pallas_call(
+        functools.partial(_hist_kernel, num_bins=bins_pad, block_n=block_n),
+        grid=(ids.shape[0] // block_n,),
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bins_pad,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((bins_pad,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bins_pad,), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(ids)
+    return out[:num_bins]

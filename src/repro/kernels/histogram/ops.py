@@ -1,0 +1,18 @@
+"""Public histogram op with backend selection."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import histogram
+from .ref import histogram_ref
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins", "backend"))
+def count_ids(ids, num_bins: int, *, backend: str = "auto"):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return histogram_ref(ids, num_bins)
+    return histogram(ids, num_bins, interpret=(backend == "interpret"))

@@ -1,0 +1,7 @@
+"""Oracle for the Phase-1 contention histogram."""
+import jax.numpy as jnp
+
+
+def histogram_ref(ids: jnp.ndarray, num_bins: int) -> jnp.ndarray:
+    return jnp.zeros(num_bins, jnp.int32).at[ids.reshape(-1)].add(
+        1, mode="drop")

@@ -1,0 +1,88 @@
+"""Mamba2 SSD chunk scan, Pallas TPU (zamba2's compute hot spot).
+
+Grid (B, nh, NC) with the chunk dimension innermost and sequential; the
+(hd × ds) inter-chunk state lives in VMEM scratch and persists across chunk
+steps — the TPU-native shape of Mamba2's GPU kernel: intra-chunk work is two
+MXU matmuls (C·Bᵀ weight matrix, then M·x) plus the state in/out products;
+the sequential carry is tiny (hd·ds floats per (batch, head)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+                chunk: int):
+    nc = pl.program_id(2)
+
+    @pl.when(nc == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # (c, hd)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (c,)
+    A = a_ref[0]  # scalar (per head)
+    Bc = b_ref[0].astype(jnp.float32)  # (c, ds)
+    Cc = c_ref[0].astype(jnp.float32)  # (c, ds)
+
+    l = jnp.cumsum(dt * A)  # (c,) inclusive log-decay
+    # intra-chunk: M[t,s] = exp(l_t − l_s)·(C_t·B_s)·dt_s, s ≤ t
+    CB = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (c,c)
+    decay = jnp.exp(l[:, None] - l[None, :])
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    M = jnp.where(rows >= cols, CB * decay * dt[None, :], 0.0)
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # inter-chunk: y_t += C_t · (exp(l_t) · h_prev)
+    h_prev = h_ref[...]  # (hd, ds)
+    y += jnp.exp(l)[:, None] * jax.lax.dot_general(
+        Cc, h_prev, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    # state update: h = exp(l_end)·h_prev + Σ_s exp(l_end − l_s)·dt_s·x_s⊗B_s
+    decay_end = jnp.exp(l[-1] - l)  # (c,)
+    xw = x * (dt * decay_end)[:, None]  # (c, hd)
+    h_new = jnp.exp(l[-1]) * h_prev + jax.lax.dot_general(
+        xw, Bc, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    h_ref[...] = h_new
+    y_ref[0, 0, ...] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             Bc: jnp.ndarray, Cc: jnp.ndarray, *, chunk: int = 128,
+             interpret: bool = False) -> jnp.ndarray:
+    """x: (B,S,nh,hd); dt: (B,S,nh); A: (nh,); Bc/Cc: (B,S,ds) ->
+    y: (B,S,nh,hd) = SSD scan output (without the D·x skip term)."""
+    B, S, nh, hd = x.shape
+    ds = Bc.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    NC = S // chunk
+    xt = x.transpose(0, 2, 1, 3)  # (B, nh, S, hd)
+    dtt = dt.transpose(0, 2, 1)  # (B, nh, S)
+    grid = (B, nh, NC)
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, n: (b, h, n, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, n: (b, h, n)),
+            pl.BlockSpec((1,), lambda b, h, n: (h,)),
+            pl.BlockSpec((1, chunk, ds), lambda b, h, n: (b, n, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, h, n: (b, n, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, hd), lambda b, h, n: (b, h, n, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nh, S, hd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xt, dtt, A.astype(jnp.float32), Bc, Cc)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,19 @@
+"""Public SSD-scan op with backend selection."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import ssd_scan
+from .ref import ssd_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "backend"))
+def mamba_ssd(x, dt, A, Bc, Cc, *, chunk: int = 128, backend: str = "auto"):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    if backend == "ref":  # pragma: no cover - numpy oracle, tests only
+        return ssd_scan_ref(x, dt, A, Bc, Cc)
+    return ssd_scan(x, dt, A, Bc, Cc, chunk=chunk,
+                    interpret=(backend == "interpret"))

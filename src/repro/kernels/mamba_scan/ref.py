@@ -1,0 +1,23 @@
+"""Oracle for the per-head SSD chunk scan: naive sequential recurrence.
+
+    h_t = exp(dt_t·A) · h_{t-1} + dt_t · (B_t ⊗ x_t)
+    y_t = C_t · h_t
+x: (B, S, nh, hd); dt: (B, S, nh); A: (nh,) negative; Bc/Cc: (B, S, ds).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+
+def ssd_scan_ref(x, dt, A, Bc, Cc):
+    B, S, nh, hd = x.shape
+    ds = Bc.shape[-1]
+    h = np.zeros((B, nh, hd, ds), np.float64)
+    y = np.zeros((B, S, nh, hd), np.float64)
+    x, dt, A = np.asarray(x, np.float64), np.asarray(dt, np.float64), np.asarray(A, np.float64)
+    Bc, Cc = np.asarray(Bc, np.float64), np.asarray(Cc, np.float64)
+    for t in range(S):
+        a = np.exp(dt[:, t] * A)  # (B, nh)
+        upd = np.einsum("bhp,bd->bhpd", x[:, t] * dt[:, t][..., None], Bc[:, t])
+        h = a[:, :, None, None] * h + upd
+        y[:, t] = np.einsum("bhpd,bd->bhp", h, Cc[:, t])
+    return jnp.asarray(y, jnp.float32)

@@ -1,0 +1,69 @@
+"""Grouped (block-diagonal) GEMM — TD-Orch Phase 3 for MoE experts.
+
+megablocks-style: rows are pre-sorted by expert and padded so every
+(block_m)-row tile belongs to exactly ONE expert; the tile→expert map rides
+scalar prefetch, and each tile's weight block is selected through the
+BlockSpec index_map — so the MXU only ever sees dense (bm × bk)·(bk × bn)
+tiles and zero flops are wasted on other experts' weights (unlike the
+one-hot-masked dense einsum, which pays E× the flops).
+
+Grid (tiles_m, N/bn, K/bk), K innermost sequential with a VMEM f32
+accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(tile_group_ref, x_ref, w_ref, o_ref, acc_ref):
+    kk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def grouped_gemm_padded(x_pad: jnp.ndarray, w: jnp.ndarray,
+                        tile_group: jnp.ndarray, *, block_m: int,
+                        block_n: int, block_k: int,
+                        interpret: bool = False) -> jnp.ndarray:
+    """x_pad: (M_pad, K) with every block_m-row tile single-group;
+    tile_group: (M_pad / block_m,) int32 expert per tile."""
+    M_pad, K = x_pad.shape
+    G, _, N = w.shape
+    assert M_pad % block_m == 0 and K % block_k == 0 and N % block_n == 0
+    grid = (M_pad // block_m, N // block_n, K // block_k)
+
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, block_k), lambda t, n, kk, tg: (t, kk)),
+                pl.BlockSpec((1, block_k, block_n),
+                             lambda t, n, kk, tg: (tg[t], kk, n)),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n),
+                                   lambda t, n, kk, tg: (t, n)),
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M_pad, N), x_pad.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tile_group, x_pad, w)

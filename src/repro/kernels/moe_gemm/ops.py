@@ -1,0 +1,60 @@
+"""Public grouped-GEMM op: block-diagonal padding plumbing around the Pallas
+kernel (static worst-case pad M + G·block_m), with ragged_dot fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import grouped_gemm_padded
+from .ref import grouped_gemm_ref
+
+
+def _padding_plan(group_sizes: jnp.ndarray, M: int, block_m: int):
+    """Row -> padded-row scatter indices + per-tile group map (all static
+    shapes; values traced)."""
+    G = group_sizes.shape[0]
+    padded_sizes = ((group_sizes + block_m - 1) // block_m) * block_m
+    pad_starts = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(padded_sizes)[:-1].astype(jnp.int32)])
+    starts = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(group_sizes)[:-1].astype(jnp.int32)])
+    # group of each original row (rows sorted by group)
+    rows = jnp.arange(M, dtype=jnp.int32)
+    row_group = jnp.searchsorted(jnp.cumsum(group_sizes), rows, side="right"
+                                 ).astype(jnp.int32)
+    offset_in_group = rows - starts[row_group]
+    scatter_pos = pad_starts[row_group] + offset_in_group
+    # static worst case, rounded to a whole number of tiles
+    M_pad = ((M + block_m - 1) // block_m) * block_m + G * block_m
+    n_tiles = M_pad // block_m
+    tile_ids = jnp.arange(n_tiles, dtype=jnp.int32) * block_m
+    tile_group = jnp.clip(
+        jnp.searchsorted(jnp.cumsum(padded_sizes), tile_ids, side="right"),
+        0, G - 1).astype(jnp.int32)
+    return scatter_pos, tile_group, M_pad
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "backend"))
+def grouped_gemm(x: jnp.ndarray, w: jnp.ndarray, group_sizes: jnp.ndarray, *,
+                 block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                 backend: str = "auto") -> jnp.ndarray:
+    """x: (M, K) sorted by group; w: (G, K, N); group_sizes: (G,) -> (M, N).
+    Rows beyond sum(group_sizes) produce zeros."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return grouped_gemm_ref(x, w, group_sizes)
+    M, K = x.shape
+    G, _, N = w.shape
+    bn = min(block_n, N)
+    bk = min(block_k, K)
+    bm = min(block_m, max(8, M))
+    scatter_pos, tile_group, M_pad = _padding_plan(group_sizes, M, bm)
+    x_pad = jnp.zeros((M_pad, K), x.dtype).at[scatter_pos].set(x)
+    y_pad = grouped_gemm_padded(x_pad, w, tile_group, block_m=bm,
+                                block_n=bn, block_k=bk,
+                                interpret=(backend == "interpret"))
+    return y_pad[scatter_pos]

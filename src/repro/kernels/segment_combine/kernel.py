@@ -1,0 +1,69 @@
+"""Merge-able write-back ⊗-combine (TD-Orch Phase 4 / DistEdgeMap
+destination aggregation), Pallas TPU.
+
+Accumulates per-destination sums for streamed (value, segment) tiles:
+    out += onehotᵀ(seg_tile) @ values_tile
+— an MXU matmul per tile, no scatter. The destination block (V × W) stays
+resident in VMEM across the sequential grid; V is the per-shard vertex/row
+count (the graph partition or the local expert/token slice), which is what
+TD-Orch's load balance bounds to O(n/P).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _seg_kernel(val_ref, seg_ref, o_ref, acc_ref, *, num_seg: int,
+                block_n: int):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seg = seg_ref[...]
+    segs = jax.lax.broadcasted_iota(jnp.int32, (block_n, num_seg), 1)
+    onehot = (seg[:, None] == segs).astype(jnp.float32)  # (bn, V)
+    acc_ref[...] += jax.lax.dot_general(
+        onehot, val_ref[...].astype(jnp.float32),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(i == n - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def segment_add(values: jnp.ndarray, seg: jnp.ndarray, num_segments: int, *,
+                block_n: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """values: (N, W); seg: (N,) int32 -> (num_segments, W). Out-of-range
+    segment ids contribute nothing."""
+    N, W = values.shape
+    block_n = min(block_n, max(N, 8))
+    pad = (-N) % block_n
+    if pad:
+        values = jnp.concatenate(
+            [values, jnp.zeros((pad, W), values.dtype)])
+        seg = jnp.concatenate([seg, jnp.full((pad,), num_segments, jnp.int32)])
+    V_pad = ((num_segments + 127) // 128) * 128
+    W_pad = ((W + 127) // 128) * 128
+    if W_pad != W:
+        values = jnp.pad(values, ((0, 0), (0, W_pad - W)))
+    out = pl.pallas_call(
+        functools.partial(_seg_kernel, num_seg=V_pad, block_n=block_n),
+        grid=(values.shape[0] // block_n,),
+        in_specs=[pl.BlockSpec((block_n, W_pad), lambda i: (i, 0)),
+                  pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((V_pad, W_pad), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((V_pad, W_pad), values.dtype),
+        scratch_shapes=[pltpu.VMEM((V_pad, W_pad), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(values, seg.astype(jnp.int32))
+    return out[:num_segments, :W]

@@ -1,0 +1,19 @@
+"""Public segment-combine op with backend selection."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import segment_add
+from .ref import segment_add_ref
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "backend"))
+def combine_add(values, seg, num_segments: int, *, backend: str = "auto"):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return segment_add_ref(values, seg, num_segments)
+    return segment_add(values, seg, num_segments,
+                       interpret=(backend == "interpret"))

@@ -1,0 +1,9 @@
+"""Oracle for the Phase-4 merge-able ⊗-combine (segment reduce)."""
+import jax.numpy as jnp
+
+
+def segment_add_ref(values: jnp.ndarray, seg: jnp.ndarray,
+                    num_segments: int) -> jnp.ndarray:
+    """values (N, W), seg (N,) -> (num_segments, W); out-of-range dropped."""
+    return jnp.zeros((num_segments, values.shape[1]), values.dtype).at[
+        seg].add(values, mode="drop")

@@ -1,0 +1,118 @@
+"""Distributed hash table on the orchestration interface (§2.1, §4).
+
+One batch of GET/UPDATE operations is one orchestration stage: each task
+(i) reads the value at its key, (ii) runs the multiply-and-add lambda on the
+fetched value, (iii) optionally writes the result back. The `engine` kwarg
+switches the scheduling strategy (TD-Orch vs §2.3 baselines) with zero
+change to this application code — which is the abstraction's claim.
+
+Concurrent-update semantics: updates to the same key in one batch resolve by
+the deterministic decision process of Definition 2 case (iv) — lowest task
+priority (issue order) wins — matching a linearizable batch where the first
+writer's multiply-and-add lands. (The paper's hash-table runs one stage per
+batch, so chained same-key updates belong to later batches.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..core import DataStore, OrchestrationResult, TaskBatch, orchestration
+
+
+@dataclasses.dataclass
+class KVResult:
+    values: np.ndarray  # per-op fetched (pre-update) values
+    report: object  # StageReport
+    refcount: Dict[int, int]
+
+
+class DistributedHashTable:
+    """num_keys buckets of `value_width` words each, random machine placement."""
+
+    def __init__(
+        self,
+        num_keys: int,
+        num_machines: int,
+        value_width: int = 8,
+        chunk_words: int | None = None,
+        seed: int = 0,
+    ):
+        self.store = DataStore.create(
+            num_keys,
+            num_machines,
+            value_width=value_width,
+            chunk_words=chunk_words or value_width,
+            salt=seed,
+        )
+        self.P = num_machines
+
+    @property
+    def values(self) -> np.ndarray:
+        return self.store.values
+
+    def bulk_load(self, keys: np.ndarray, values: np.ndarray) -> None:
+        self.store.values[np.asarray(keys, dtype=np.int64)] = values
+
+    def execute_batch(
+        self,
+        keys: np.ndarray,
+        is_read: np.ndarray,
+        operand: np.ndarray,
+        *,
+        engine: str = "tdorch",
+        origin: Optional[np.ndarray] = None,
+        **engine_opts,
+    ) -> KVResult:
+        """Run one YCSB-style batch: GETs return values; UPDATEs write
+        multiply-and-add results back."""
+        n = keys.shape[0]
+        keys = np.asarray(keys, dtype=np.int64)
+        is_read = np.asarray(is_read, dtype=bool)
+        if origin is None:
+            origin = TaskBatch.even_origins(n, self.P)
+        # context = (is_read_flag, multiplier, addend): σ = 3 words
+        ctx = np.concatenate(
+            [is_read[:, None].astype(np.float64), np.asarray(operand, dtype=np.float64)],
+            axis=1,
+        )
+        # UPDATE tasks write back to their key; GETs write nowhere (-1)
+        write_keys = np.where(is_read, np.int64(-1), keys)
+        tasks = TaskBatch(
+            contexts=ctx, read_keys=keys, write_keys=write_keys, origin=origin
+        )
+        width = self.store.value_width
+
+        def f(contexts: np.ndarray, in_vals: np.ndarray) -> Dict[str, np.ndarray]:
+            mul = contexts[:, 1:2]
+            add = contexts[:, 2:3]
+            updated = in_vals * mul + add  # the §4 multiply-and-add lambda
+            return {"update": updated, "result": in_vals}
+
+        res: OrchestrationResult = orchestration(
+            tasks,
+            f,
+            self.store,
+            write_back="write",
+            engine=engine,
+            return_results=True,
+            **engine_opts,
+        )
+        return KVResult(values=res.results, report=res.report, refcount=res.refcount)
+
+    # ---- sequential oracle for tests --------------------------------------
+    @staticmethod
+    def oracle(values, keys, is_read, operand):
+        """First-writer-wins batch semantics over a snapshot."""
+        values = values.copy()
+        snapshot = values.copy()
+        results = snapshot[keys].copy()
+        written = np.zeros(values.shape[0], dtype=bool)
+        for i in np.argsort(np.arange(keys.size), kind="stable"):
+            k = keys[i]
+            if not is_read[i] and not written[k]:
+                values[k] = snapshot[k] * operand[i, 0] + operand[i, 1]
+                written[k] = True
+        return values, results

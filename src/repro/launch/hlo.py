@@ -1,0 +1,110 @@
+"""HLO-text analysis: collective-byte accounting for the roofline.
+
+cost_analysis() has FLOPs/bytes but no collective volumes, so we parse the
+compiled module: for every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute, take the result tensor bytes and the
+replica-group size g, and charge per-device wire bytes with the standard
+ring-algorithm factors:
+
+    all-reduce          2·size·(g−1)/g
+    all-gather          size·(g−1)/g            (size = gathered output)
+    reduce-scatter      size·(g−1)              (size = scattered output)
+    all-to-all          size·(g−1)/g
+    collective-permute  size
+
+Caveat: ops inside a while body (scan) appear once — callers that scan over
+layers must multiply by trip count (the roofline pass uses small UNROLLED
+depths instead and extrapolates; see roofline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_TYPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _tensor_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUP_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2  # unknown grouping: conservative
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float  # per-device, ring-factor adjusted
+    result_bytes: float
+    count: int
+    by_kind: Dict[str, float]
+    lines: List[str]
+
+
+def parse_collectives(hlo_text: str, max_lines: int = 40) -> CollectiveStats:
+    wire = 0.0
+    raw = 0.0
+    count = 0
+    by_kind: Dict[str, float] = {}
+    keep: List[str] = []
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        kind = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\)?\s{c}(\.|\()", " " + ls) or f" {c}(" in ls:
+                kind = c
+                break
+        if kind is None or f"{kind}-start" in ls and False:
+            continue
+        # skip the -done halves of async pairs (counted at -start)
+        if re.search(rf"{kind}-done", ls):
+            continue
+        lhs = ls.split("=", 1)[0] + "=" + ls.split("=", 1)[1].split(kind)[0]
+        size = _tensor_bytes(lhs)
+        if size == 0:
+            continue
+        g = _group_size(ls)
+        if kind == "all-reduce":
+            w = 2.0 * size * (g - 1) / g
+        elif kind == "all-gather":
+            w = size * (g - 1) / g
+        elif kind == "reduce-scatter":
+            w = float(size) * (g - 1)
+        elif kind == "all-to-all":
+            w = size * (g - 1) / g
+        else:
+            w = float(size)
+        wire += w
+        raw += size
+        count += 1
+        by_kind[kind] = by_kind.get(kind, 0.0) + w
+        if len(keep) < max_lines:
+            keep.append(ls[:160])
+    return CollectiveStats(wire_bytes=wire, result_bytes=raw, count=count,
+                           by_kind=by_kind, lines=keep)

@@ -1,0 +1,25 @@
+"""Production meshes. A FUNCTION, not a module-level constant — importing
+this module must never touch jax device state (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first init;
+tests and benches see 1 device)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16×16 = 256 chips ("data", "model").
+    Multi-pod: 2×16×16 = 512 chips ("pod", "data", "model") — the pod axis
+    carries pure DP (gradient all-reduce over DCI); FSDP/TP stay within the
+    pod's ICI domain."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

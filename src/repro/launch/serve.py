@@ -1,0 +1,72 @@
+"""Serving launcher: batched prefill + decode loop on the reduced config.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import all_arch_ids, get_reduced
+from ..models import Model
+
+
+def generate(model: Model, params, prompts: jnp.ndarray, gen: int,
+             temperature: float = 0.0, seed: int = 0):
+    """Greedy/temperature batched generation with a prefill + decode loop."""
+    B, S = prompts.shape
+    max_len = S + gen
+    logits, caches = model.prefill(params, tokens=prompts, max_len=max_len)
+    decode = jax.jit(model.decode_step, static_argnames=())
+    out = [prompts]
+    key = jax.random.PRNGKey(seed)
+    tok = None
+    for i in range(gen):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits[:, -1] / temperature)
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)
+        tok = tok[:, None].astype(jnp.int32)
+        out.append(tok)
+        logits, caches = decode(params, caches, tokens=tok,
+                                cache_pos=S + i)
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b",
+                    choices=all_arch_ids())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    if cfg.modality_stub:
+        raise SystemExit("modality-stub backbones serve via embeddings; "
+                         "use a token arch for this demo")
+    model = Model(cfg, scan_layers=True)
+    params = model.init(0)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+    t0 = time.perf_counter()
+    seqs = generate(model, params, prompts, args.gen,
+                    temperature=args.temperature)
+    dt = time.perf_counter() - t0
+    print(f"generated {args.batch}×{args.gen} tokens in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s incl. compile)")
+    print("first sequence:", np.asarray(seqs[0]).tolist()[:24], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""Sharding rules: param/optimizer/batch/cache PartitionSpecs per arch.
+
+Strategy (baseline; §Perf iterates on it):
+  * TP on "model": attention Q/O + FFN hidden + vocab (Megatron-style
+    column/row pairs so each block pays exactly one reduce per matmul pair).
+  * GQA with kv_heads < |model|: K/V projections replicate on "model"
+    (heads can't split 16 ways); the decode KV cache shards on *sequence*
+    instead, and softmax-over-sharded-sequence gives flash-decode combines.
+  * FSDP on "data" for every ≥2D weight (ZeRO-3); optimizer moments
+    likewise (ZeRO-1 comes free). The "pod" axis is pure DP — FSDP
+    all-gathers stay inside one pod's ICI domain.
+  * MoE experts shard on "model" (EP); the TD-Orch dispatch shard_map
+    island consumes them as P("model", ...).
+  * Divisibility guard: any dim not divisible by its axis size falls back
+    to replication (e.g. zamba2's fused in_proj odd widths).
+
+Rules match on the *parameter name* (leaf key) and apply to the trailing
+dims; stacked-layer leading dims get None automatically.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+# tail-dim templates per leaf name: "F" = fsdp axis, "M" = model axis
+_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / head
+    "embed": ("M", "F"),
+    "lm_head": ("F", "M"),
+    # attention
+    "wq": ("F", "M"),
+    "wk": ("F", "M"),
+    "wv": ("F", "M"),
+    "wo": ("M", "F"),
+    "bq": ("M",),
+    "bk": (None,),
+    "bv": (None,),
+    # dense MLP
+    "w_gate": ("F", "M"),
+    "w_up": ("F", "M"),
+    "w_down": ("M", "F"),
+    # MoE (consumed by the shard_map island as P("model", ...))
+    "router": (None, None),
+    "w_in": ("M", None, "F"),
+    "w_out": ("M", None, "F"),
+    # mamba2
+    "in_proj": ("F", "M"),
+    "out_proj": ("M", "F"),
+    "conv_w": (None, None),
+    "conv_b": (None,),
+    "A_log": (None,),
+    "D": (None,),
+    "dt_bias": (None,),
+    "out_norm": (None,),
+    # xlstm
+    "up": ("F", "M"),
+    "down": ("M", "F"),
+    "w_gates": ("F", None),
+    "b_gates": (None,),
+    "w_in_slstm": ("F", "M"),
+    "r": (None, None, None, None),
+    "b": (None,),
+    "ffn_up": ("F", "M"),
+    "ffn_down": ("M", "F"),
+    "norm_ffn": (None,),
+}
+_NORM_NAMES = {"ln", "ln1", "ln2", "final_norm", "norm_ffn", "out_norm"}
+
+
+def _leaf_name(path) -> str:
+    keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    name = keys[-1]
+    # slstm's w_in shares a name with mamba's in_proj-style rule; disambiguate
+    if name == "w_in" and any("slstm" in k for k in keys):
+        return "w_in_slstm"
+    return name
+
+
+def _resolve(template, shape, mesh: Mesh, fsdp: bool, tp: bool):
+    """Template tail -> full PartitionSpec with divisibility fallbacks."""
+    ndim = len(shape)
+    tail = list(template)[-ndim:] if len(template) >= ndim else list(template)
+    spec = [None] * (ndim - len(tail)) + tail
+    out = []
+    for dim, want in zip(shape, spec):
+        axis = None
+        if want == "M" and tp and "model" in mesh.axis_names:
+            axis = "model" if dim % mesh.shape["model"] == 0 else None
+        elif want == "F" and fsdp and "data" in mesh.axis_names:
+            axis = "data" if dim % mesh.shape["data"] == 0 else None
+        out.append(axis)
+    # never shard the same axis twice in one spec
+    seen = set()
+    out = [a if (a is None or a not in seen) and not seen.add(a) else None
+           for a in out]
+    return P(*out)
+
+
+def param_pspecs(params, cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = True,
+                 tp: bool = True):
+    """Pytree of PartitionSpec matching `params` (works on ShapeDtypeStructs
+    from jax.eval_shape — no allocation). tp=False replicates over the
+    model axis (pure-DP preset for small models — §Perf) EXCEPT MoE expert
+    tables, which always ride "model" (the EP shard_map needs them there)."""
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        if name in _NORM_NAMES or name not in _RULES:
+            tmpl = (None,) * leaf.ndim
+        else:
+            tmpl = _RULES[name]
+        keep_tp = tp or name in ("w_in", "w_out")  # EP stays on "model"
+        return _resolve(tmpl, leaf.shape, mesh, fsdp, keep_tp)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_pspecs(param_specs, params, mesh: Mesh):
+    """ZeRO-1: moments inherit the param spec, and any still-unsharded
+    leading dim (replicated small params) gets the data axis if divisible."""
+
+    def one(spec, leaf):
+        names = list(spec)
+        if "data" not in names and "data" in mesh.axis_names:
+            for i, (ax, dim) in enumerate(zip(names, leaf.shape)):
+                if ax is None and dim % mesh.shape["data"] == 0 and dim >= mesh.shape["data"]:
+                    names[i] = "data"
+                    break
+        return P(*names)
+
+    moments = jax.tree.map(one, param_specs, params)
+    return {"m": moments, "v": moments, "step": P()}
+
+
+def batch_axes_of(mesh: Mesh, include_model: bool = False) -> Tuple[str, ...]:
+    names = ("pod", "data", "model") if include_model else ("pod", "data")
+    return tuple(a for a in names if a in mesh.axis_names)
+
+
+def batch_pspec(mesh: Mesh, batch_size: int,
+                include_model: bool = False) -> P:
+    axes = batch_axes_of(mesh, include_model)
+    total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and batch_size % total == 0:
+        return P(axes)
+    # small batches: shard over as much of the batch axes as divides
+    for sub in (("pod", "data"), ("data",), ()):
+        t = int(np.prod([mesh.shape[a] for a in sub])) if sub else 1
+        if batch_size % t == 0 and all(a in mesh.axis_names for a in sub):
+            return P(sub if sub else None)
+    return P(None)
+
+
+def activation_pspec(mesh: Mesh, batch_size: int, seq_len: int,
+                     sequence_parallel: bool = True,
+                     tp: bool = True) -> P:
+    """Residual-stream constraint: batch over DP axes + (optionally) seq
+    over "model" — Megatron sequence parallelism; cuts per-device live
+    activations |model|× between blocks. tp=False (pure DP): batch spreads
+    over the model axis instead."""
+    b = batch_pspec(mesh, batch_size, include_model=not tp)
+    bspec = b[0] if len(b) else None
+    if tp and sequence_parallel and "model" in mesh.axis_names \
+            and seq_len % mesh.shape["model"] == 0:
+        return P(bspec, "model", None)
+    return P(bspec, None, None)
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int):
+    """Decode-cache shardings. Attention k/v (L, B, T, KV, hd): batch over
+    DP axes when divisible; KV heads over "model" when they cover it, else
+    the *sequence* dim (flash-decode partial-softmax combine). SSM/LSTM
+    states: batch over DP axes, biggest feature dim over "model"."""
+    bspec = batch_pspec(mesh, batch)
+    baxes = bspec[0] if len(bspec) else None
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    def attn_spec(shape):  # (n, B, T, KV, hd)
+        kv = shape[3]
+        if kv % msize == 0 and kv >= msize:
+            return P(None, baxes, None, "model", None)
+        if shape[2] % msize == 0:
+            return P(None, baxes, "model", None, None)
+        return P(None, baxes, None, None, None)
+
+    def generic(leaf):
+        # batch dim is 1 for stacked (L, B, ...) states; shard a feature dim
+        names = [None] * leaf.ndim
+        if leaf.ndim >= 2:
+            names[1] = baxes if leaf.shape[1] == batch and batch > 1 else None
+        for i in range(leaf.ndim - 1, 1, -1):
+            if leaf.shape[i] % msize == 0 and leaf.shape[i] >= msize:
+                names[i] = "model"
+                break
+        return P(*names)
+
+    model_tmp = __import__("repro.models.model", fromlist=["Model"])
+    m = model_tmp.Model(cfg, mesh=None)
+    shapes = m.init_caches(batch, max_len, like=jax.ShapeDtypeStruct)
+
+    def assign(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        if leaf.ndim == 5 and leaf.shape[2] == max_len:
+            return attn_spec(leaf.shape)
+        return generic(leaf)
+
+    return jax.tree_util.tree_map_with_path(assign, shapes), shapes
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

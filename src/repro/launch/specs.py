@@ -1,0 +1,70 @@
+"""Per-(architecture × shape) input specs: ShapeDtypeStruct stand-ins for
+every model input — weak-type-correct, shardable, zero allocation.
+
+Shapes (assignment):
+    train_4k     seq 4096,   global_batch 256   (training, train_step)
+    prefill_32k  seq 32768,  global_batch 32    (inference prefill)
+    decode_32k   seq 32768,  global_batch 128   (one token + 32k KV cache)
+    long_500k    seq 524288, global_batch 1     (long-context decode;
+                 sub-quadratic archs only — zamba2, xlstm)
+
+[vlm]/[audio] archs take precomputed frame/patch embeddings (modality
+frontend STUB) instead of token ids; qwen2-vl additionally takes (3, B, S)
+M-RoPE position ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+SHAPES: Dict[str, Dict[str, int]] = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32_768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32_768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524_288, batch=1, kind="decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic context handling (see DESIGN.md
+    §Arch-applicability for the skip rationale)."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("skipped: pure full-attention arch — a 500k-entry "
+                       "KV cache per layer is out of serving scope; run on "
+                       "SSM/hybrid archs only")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree for the given workload shape."""
+    info = SHAPES[shape]
+    B, S, kind = info["batch"], info["seq"], info["kind"]
+    sds = jax.ShapeDtypeStruct
+    out: Dict[str, Any] = {"kind": kind, "batch": B, "seq": S}
+
+    def token_inputs(b, s):
+        if cfg.modality_stub:
+            d: Dict[str, Any] = {
+                "embeds": sds((b, s, cfg.d_model), jnp.bfloat16)}
+        else:
+            d = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.rope_kind == "mrope":
+            d["positions"] = sds((3, b, s), jnp.int32)
+        return d
+
+    if kind == "train":
+        batch = token_inputs(B, S)
+        batch["targets"] = sds((B, S), jnp.int32)
+        out["batch"] = B
+        out["inputs"] = batch
+    elif kind == "prefill":
+        out["inputs"] = token_inputs(B, S)
+    else:  # decode: one new token against an S-long cache
+        out["inputs"] = token_inputs(B, 1)
+        out["cache_len"] = S
+    return out

@@ -1,0 +1,79 @@
+"""Training launcher: `python -m repro.launch.train --arch <id> [...]`.
+
+On this CPU container it drives the REDUCED config end-to-end (the
+examples/train_moe.py path); on a real pod the same driver binds the full
+config to the production mesh (--full --mesh single|multi) with the exact
+step function the dry-run validated.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from ..configs import all_arch_ids, get_config, get_reduced
+from ..data import SyntheticLMStream
+from ..models import Model
+from ..optim import AdamWConfig
+from ..runtime import FailureInjector, Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-moe-1b-a400m",
+                    choices=all_arch_ids())
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--inject-failure-at", type=int, default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="full config on the production mesh (pod only)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.full:
+        raise SystemExit("--full requires a TPU pod; this container is the "
+                         "CPU dry-run host. Use repro.launch.dryrun to "
+                         "validate the full-config step end-to-end.")
+
+    cfg = get_reduced(args.arch)
+    if cfg.modality_stub:
+        raise SystemExit(f"{args.arch} is a modality-stub backbone; train a "
+                         "token arch or use examples/quickstart.py")
+    model = Model(cfg, scan_layers=True)
+    stream = SyntheticLMStream(vocab_size=cfg.vocab_size,
+                               batch_size=args.batch, seq_len=args.seq,
+                               seed=0, noise=0.05)
+    injector = None
+    if args.inject_failure_at is not None:
+        injector = FailureInjector(schedule={args.inject_failure_at: [0]})
+    trainer = Trainer(
+        model,
+        AdamWConfig(peak_lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                    total_steps=args.steps),
+        TrainerConfig(total_steps=args.steps, checkpoint_every=args.ckpt_every,
+                      checkpoint_dir=args.ckpt_dir,
+                      grad_accum=args.grad_accum,
+                      compress_grads=args.compress_grads),
+        stream,
+        failure_injector=injector,
+    )
+    out = trainer.run()
+    for h in out["history"]:
+        print(f"step {h['step']:5d}  loss {h['loss']:.4f}  "
+              f"gnorm {h['grad_norm']:.2f}  lr {h['lr']:.2e}  "
+              f"{h['sec_per_step']*1e3:.0f} ms/step")
+    print(f"recoveries: {out['recoveries']}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(out["history"], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+# LM-family model zoo: one unified functional Model covering all ten
+# assigned architectures, with TD-Orch push-pull as the MoE dispatch engine.
+from .config import ModelConfig, MoEConfig, SSMConfig, XLSTMConfig
+from .model import Model
+
+__all__ = ["Model", "ModelConfig", "MoEConfig", "SSMConfig", "XLSTMConfig"]

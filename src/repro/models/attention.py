@@ -1,0 +1,269 @@
+"""GQA attention: full causal (train/prefill) and KV-cache decode.
+
+Written as plain jnp so GSPMD partitions it from the in/out shardings:
+Q heads shard over the model axis; when kv_heads < model-axis size the KV
+tensors replicate over heads and the decode cache shards over *sequence*
+instead — softmax over a sequence-sharded axis makes XLA emit exactly the
+flash-decode partial-softmax combine (max + sum all-reduces).
+
+The Pallas flash kernel in repro.kernels.flash_attention is the tuned
+single-chip path; this module is the semantic definition GSPMD partitions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_mrope, apply_rope, truncated_normal
+
+NEG_INF = -2.0e38
+
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    p = {
+        "wq": truncated_normal(ks[0], (d, qd), std, dtype),
+        "wk": truncated_normal(ks[1], (d, kvd), std, dtype),
+        "wv": truncated_normal(ks[2], (d, kvd), std, dtype),
+        "wo": truncated_normal(ks[3], (qd, d), qd ** -0.5, dtype),
+    }
+    if cfg.attn_qkv_bias:
+        p["bq"] = jnp.zeros((qd,), dtype)
+        p["bk"] = jnp.zeros((kvd,), dtype)
+        p["bv"] = jnp.zeros((kvd,), dtype)
+    return p
+
+
+def _project_qkv(params, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.attn_qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.rope_kind == "standard":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope_kind == "mrope":
+        # positions: (3, B, S) multimodal ids (t, h, w)
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def _sdpa(q, k, v, cfg: ModelConfig, mask):
+    """q: (B,S,H,hd); k/v: (B,T,KV,hd); grouped-query broadcast.
+    f32 accumulation via preferred_element_type — inputs are consumed in
+    their storage dtype so the (possibly huge) KV cache is never
+    materialized as an f32 copy."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    G = H // cfg.n_kv_heads
+    q = q.reshape(B, S, cfg.n_kv_heads, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, hd).astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash_xla(q, k, v, softcap, chunk):
+    out, _, _ = _flash_fwd_scan(q, k, v, softcap, chunk)
+    return out
+
+
+def _flash_fwd_scan(q, k, v, softcap, chunk):
+    """Flash forward in XLA ops: scan over KV chunks with online softmax.
+    Returns (out, m, l) — the backward recomputes per-chunk probabilities,
+    so live score memory is O(S·chunk) in BOTH passes (the property the
+    Pallas kernel has on-chip; this is its GSPMD-partitionable twin)."""
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    NC = T // chunk
+    kc = jnp.moveaxis(k.reshape(B, NC, chunk, KV, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, NC, chunk, KV, hd), 1, 0)
+    rows = jnp.arange(S)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kj, vj, j = inp
+        s = jnp.einsum("bskgh,btkh->bkgst", q, kj,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        cols = j * chunk + jnp.arange(chunk)
+        s = jnp.where((rows[:, None] >= cols[None, :])[None, None, None],
+                      s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkh->bkgsh", p, vj, preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, S), jnp.float32)
+    acc0 = jnp.zeros((B, KV, G, S, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kc, vc, jnp.arange(NC)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype), m, l
+
+
+def _flash_fwd_rule(q, k, v, softcap, chunk):
+    out, m, l = _flash_fwd_scan(q, k, v, softcap, chunk)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_bwd_rule(softcap, chunk, res, dout):
+    q, k, v, out, m, l = res
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    NC = T // chunk
+    kc = jnp.moveaxis(k.reshape(B, NC, chunk, KV, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, NC, chunk, KV, hd), 1, 0)
+    rows = jnp.arange(S)
+    do = dout.astype(jnp.float32)
+    # D = rowsum(dO ⊙ O)
+    D = jnp.sum(do * out.astype(jnp.float32), axis=-1)  # (B,KV,G,S)
+    linv = 1.0 / jnp.maximum(l, 1e-30)
+
+    def body(dq, inp):
+        kj, vj, j = inp
+        s = jnp.einsum("bskgh,btkh->bkgst", q, kj,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap:
+            raw = s
+            s = jnp.tanh(raw / softcap) * softcap
+        cols = j * chunk + jnp.arange(chunk)
+        mask = (rows[:, None] >= cols[None, :])[None, None, None]
+        s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - m[..., None]) * linv[..., None]  # (B,KV,G,S,c)
+        dp = jnp.einsum("bkgsh,btkh->bkgst", do, vj,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - D[..., None])
+        if softcap:
+            ds = ds * (1.0 - jnp.square(jnp.tanh(raw / softcap)))
+        ds = jnp.where(mask, ds, 0.0)
+        dq = dq + jnp.einsum("bkgst,btkh->bskgh", ds, kj,
+                             preferred_element_type=jnp.float32) * scale
+        dk_j = jnp.einsum("bkgst,bskgh->btkh", ds, q.astype(jnp.float32)
+                          ) * scale
+        dv_j = jnp.einsum("bkgst,bkgsh->btkh", p, do)
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, S, KV, G, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (kc, vc, jnp.arange(NC)))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, T, KV, hd)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, T, KV, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_xla.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_attention_xla(q, k, v, cfg: ModelConfig, chunk: int = 1024):
+    """q: (B,S,H,hd), k/v: (B,T,KV,hd) -> (B,S,H,hd). Causal."""
+    B, S, H, hd = q.shape
+    G = H // cfg.n_kv_heads
+    q5 = q.reshape(B, S, cfg.n_kv_heads, G, hd)
+    out = _flash_xla(q5, k, v, cfg.attn_logit_softcap or 0.0, chunk)
+    # internal layout is (B, KV, G, S, hd)
+    return jnp.moveaxis(out, 3, 1).reshape(B, S, H, hd)
+
+
+def _sdpa_chunked(q, k, v, cfg: ModelConfig, chunk: int):
+    """Online-softmax attention over KV chunks (flash algorithm in XLA ops):
+    O(S·chunk) score memory instead of O(S²) — the dry-run/compile path for
+    32k+ sequences; the Pallas kernel is the single-chip tuned form."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    KV = cfg.n_kv_heads
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, S, KV, G, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    NC = T // chunk
+    kc = jnp.moveaxis(k.astype(jnp.float32).reshape(B, NC, chunk, KV, hd), 1, 0)
+    vc = jnp.moveaxis(v.astype(jnp.float32).reshape(B, NC, chunk, KV, hd), 1, 0)
+    rows = jnp.arange(S)
+
+    def body(carry, inp):
+        m, l, acc, j = carry
+        kj, vj = inp
+        s = jnp.einsum("bskgh,btkh->bkgst", qf, kj) * scale
+        if cfg.attn_logit_softcap:
+            c = cfg.attn_logit_softcap
+            s = jnp.tanh(s / c) * c
+        cols = j * chunk + jnp.arange(chunk)
+        mask = rows[:, None] >= cols[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bkgst,btkh->bkgsh", p, vj)
+        return (m_new, l, acc, j + 1), None
+
+    m0 = jnp.full((B, KV, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, S), jnp.float32)
+    acc0 = jnp.zeros((B, KV, G, S, hd), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, acc0, 0), (kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, -2, 1).reshape(B, S, H, hd)
+    return out.astype(v.dtype)
+
+
+# sequences at or above this length use the flash custom_vjp path (memory
+# O(S·chunk) in forward AND backward — §Perf iteration 1, see EXPERIMENTS.md)
+FLASH_THRESHOLD = 4096
+CHUNK_LEN = 1024
+
+
+def attention_full(params, cfg: ModelConfig, x, positions):
+    """Causal self-attention over the whole sequence (train / prefill).
+    Returns (out, (k, v)) so prefill can seed the decode cache."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    if S >= FLASH_THRESHOLD and S % CHUNK_LEN == 0:
+        out = flash_attention_xla(q, k, v, cfg, chunk=CHUNK_LEN)
+    else:
+        causal = jnp.tril(jnp.ones((S, S), bool))[None, None, None]
+        out = _sdpa(q, k, v, cfg, causal)
+    out = out.reshape(B, S, cfg.q_dim) @ params["wo"]
+    return out, (k, v)
+
+
+def attention_decode(params, cfg: ModelConfig, x, cache_k, cache_v,
+                     cache_pos, positions):
+    """One-token decode: x (B,1,d); cache_k/v (B,T,KV,hd); cache_pos scalar
+    index of the slot to write. Softmax over the (possibly sequence-sharded)
+    cache axis — GSPMD inserts the partial-softmax combine collectives."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, cache_pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, cache_pos, axis=1)
+    T = cache_k.shape[1]
+    valid = (jnp.arange(T) <= cache_pos)[None, None, None, None, :]
+    out = _sdpa(q, cache_k, cache_v, cfg, valid)
+    out = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+    return out, (cache_k, cache_v)

@@ -1,0 +1,175 @@
+"""Per-layer block assemblies for the LM-family patterns.
+
+Every block function has the uniform signature
+    block(params, cfg, x, positions, cache, *, decode, mesh, batch_axes)
+      -> (x_out, new_cache, aux_loss_or_None)
+so `model.py` can scan homogeneous stacks and hand-compose hybrids.
+Caches are None in training; attention caches are (k, v, pos) tuples.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_decode, attention_full, init_attention
+from .config import ModelConfig
+from .layers import init_mlp, init_rmsnorm, mlp, rmsnorm
+from .mamba import MambaState, init_mamba, mamba_chunked, mamba_decode
+from .moe import init_moe, moe_block
+from .xlstm import (
+    init_mlstm,
+    init_slstm,
+    mlstm_chunked,
+    mlstm_decode,
+    slstm_decode,
+    slstm_forward,
+)
+
+
+# ---------------------------------------------------------------------------
+# attention sub-step shared by dense/parallel/moe blocks
+# ---------------------------------------------------------------------------
+def _attn(params, cfg, x, positions, cache, decode, cache_pos):
+    if decode:
+        k_cache, v_cache = cache
+        out, (k_cache, v_cache) = attention_decode(
+            params, cfg, x, k_cache, v_cache, cache_pos, positions)
+        return out, (k_cache, v_cache)
+    out, (k, v) = attention_full(params, cfg, x, positions)
+    return out, (k, v)  # the prefill cache seed
+
+
+# ---------------------------------------------------------------------------
+# dense (glm4 / internlm2 / tinyllama / qwen2-vl / musicgen backbones)
+# ---------------------------------------------------------------------------
+def init_dense_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def dense_block(params, cfg, x, positions, cache=None, *, decode=False,
+                cache_pos=None, mesh=None, batch_axes=("data",)):
+    h, new_cache = _attn(params["attn"], cfg,
+                         rmsnorm(x, params["ln1"], cfg.norm_eps),
+                         positions, cache, decode, cache_pos)
+    x = x + h
+    x = x + mlp(params["mlp"], rmsnorm(x, params["ln2"], cfg.norm_eps))
+    return x, new_cache, None
+
+
+# ---------------------------------------------------------------------------
+# parallel attention+FFN, no biases (command-r)
+# ---------------------------------------------------------------------------
+def init_parallel_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln": init_rmsnorm(cfg.d_model, dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def parallel_block(params, cfg, x, positions, cache=None, *, decode=False,
+                   cache_pos=None, mesh=None, batch_axes=("data",)):
+    h = rmsnorm(x, params["ln"], cfg.norm_eps)
+    a, new_cache = _attn(params["attn"], cfg, h, positions, cache, decode, cache_pos)
+    x = x + a + mlp(params["mlp"], h)  # single-norm parallel residual
+    return x, new_cache, None
+
+
+# ---------------------------------------------------------------------------
+# MoE (granite-moe): attention + TD-Orch-dispatched expert FFN
+# ---------------------------------------------------------------------------
+def init_moe_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "moe": init_moe(k2, cfg, dtype),
+    }
+
+
+def moe_layer_block(params, cfg, x, positions, cache=None, *, decode=False,
+                    cache_pos=None, mesh=None, batch_axes=("data",)):
+    h, new_cache = _attn(params["attn"], cfg,
+                         rmsnorm(x, params["ln1"], cfg.norm_eps),
+                         positions, cache, decode, cache_pos)
+    x = x + h
+    y, aux = moe_block(params["moe"], cfg,
+                       rmsnorm(x, params["ln2"], cfg.norm_eps),
+                       mesh=mesh, batch_axes=batch_axes, decode=decode)
+    return x + y, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# zamba2 unit pieces: mamba layer + (external) shared attention block
+# ---------------------------------------------------------------------------
+def init_mamba_block(key, cfg: ModelConfig, dtype):
+    return {
+        "ln": init_rmsnorm(cfg.d_model, dtype),
+        "mamba": init_mamba(key, cfg, dtype),
+    }
+
+
+def mamba_block(params, cfg, x, positions, cache=None, *, decode=False,
+                cache_pos=None, mesh=None, batch_axes=("data",)):
+    h = rmsnorm(x, params["ln"], cfg.norm_eps)
+    if decode:
+        out, new_state = mamba_decode(params["mamba"], cfg, h, cache)
+    else:
+        out, new_state = mamba_chunked(params["mamba"], cfg, h)
+    return x + out, new_state, None
+
+
+def init_shared_attn_block(key, cfg: ModelConfig, dtype):
+    """zamba2's shared transformer block: ONE set of weights reused at every
+    application point (its distinguishing parameter-efficiency trick)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks
+# ---------------------------------------------------------------------------
+def init_mlstm_block(key, cfg: ModelConfig, dtype):
+    return {"ln": init_rmsnorm(cfg.d_model, dtype),
+            "cell": init_mlstm(key, cfg, dtype)}
+
+
+def mlstm_block(params, cfg, x, positions, cache=None, *, decode=False,
+                cache_pos=None, mesh=None, batch_axes=("data",)):
+    h = rmsnorm(x, params["ln"], cfg.norm_eps)
+    if decode:
+        state, tail = cache
+        out, state, tail = mlstm_decode(params["cell"], cfg, h, state, tail)
+        return x + out, (state, tail), None
+    out, (state, tail) = mlstm_chunked(params["cell"], cfg, h)
+    return x + out, (state, tail), None
+
+
+def init_slstm_block(key, cfg: ModelConfig, dtype):
+    return {"ln": init_rmsnorm(cfg.d_model, dtype),
+            "cell": init_slstm(key, cfg, dtype)}
+
+
+def slstm_block(params, cfg, x, positions, cache=None, *, decode=False,
+                cache_pos=None, mesh=None, batch_axes=("data",)):
+    h = rmsnorm(x, params["ln"], cfg.norm_eps)
+    if decode:
+        out, state = slstm_decode(params["cell"], cfg, h, cache)
+    else:
+        out, state = slstm_forward(params["cell"], cfg, h)
+    return x + out, state, None

@@ -1,0 +1,109 @@
+"""Shared neural building blocks (pure functional JAX, no framework deps).
+
+Everything takes explicit param pytrees; init_* builds them. Compute dtype
+is bf16 by default (TPU MXU native); accumulations and norms run in f32.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, std, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype=dtype)
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings: standard and M-RoPE (qwen2-vl §3.1)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) int."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """Multimodal RoPE: positions3 (3, B, S) = (temporal, height, width) ids;
+    the hd/2 frequency slots are split into three sections, each rotated by
+    its own position stream (arXiv:2409.12191). Text tokens pass identical
+    ids in all three streams, making M-RoPE == RoPE on pure text."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    sec = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])[: hd // 2]
+    # pick, per frequency slot, the position stream of its section
+    pos = positions3.astype(jnp.float32)  # (3, B, S)
+    pos_per_slot = jnp.take(pos, sec, axis=0)  # (hd/2, B, S)
+    angles = jnp.moveaxis(pos_per_slot, 0, -1) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, d: int, f: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = d ** -0.5
+    return {
+        "w_gate": truncated_normal(k1, (d, f), std, dtype),
+        "w_up": truncated_normal(k2, (d, f), std, dtype),
+        "w_down": truncated_normal(k3, (f, d), f ** -0.5, dtype),
+    }
+
+
+def mlp(params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d: int, dtype):
+    return truncated_normal(key, (vocab, d), 1.0, dtype)
+
+
+def embed(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, ids, axis=0)
+
+
+def unembed(table_or_head: jnp.ndarray, x: jnp.ndarray, tied: bool
+            ) -> jnp.ndarray:
+    if tied:
+        return x @ table_or_head.T
+    return x @ table_or_head

@@ -1,0 +1,160 @@
+"""Mamba2 (SSD) block — chunked parallel form for train/prefill, recurrent
+step for decode (zamba2's backbone; sub-quadratic, so it serves long_500k).
+
+Recurrence (per head h, scalar decay a_t = exp(dt_t · A_h)):
+    h_t = a_t · h_{t-1} + dt_t · (B_t ⊗ x_t)        state: (hd, ds)
+    y_t = C_t · h_t + D_h · x_t
+Chunked SSD: within a chunk of c tokens the contribution matrix
+M[t,s] = exp(l_t − l_s)·(C_t·B_s)·dt_s (l = inclusive cumsum of log a) is an
+attention-like (c×c) lower-triangular matmul; chunk-final states propagate
+through a `lax.scan` over chunks. This is the TPU-native adaptation of
+Mamba2's GPU kernel structure (MXU-sized intra-chunk matmuls + tiny carry).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rmsnorm, truncated_normal
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray  # (B, d_conv-1, conv_channels) trailing inputs
+    ssm: jnp.ndarray  # (B, nh, hd, ds)
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.d_state
+    return s, d_in, nh, conv_ch
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    s, d_in, nh, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    std = d ** -0.5
+    return {
+        # fused in_proj: [z (d_in), xBC (conv_ch), dt (nh)]
+        "in_proj": truncated_normal(ks[0], (d, d_in + conv_ch + nh), std, dtype),
+        "conv_w": truncated_normal(ks[1], (s.d_conv, conv_ch), 0.1, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(A_log) in (-1, 0)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_norm": jnp.ones((d_in,), dtype),
+        "out_proj": truncated_normal(ks[2], (d_in, d), d_in ** -0.5, dtype),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 init: jnp.ndarray | None):
+    """Depthwise causal conv, kernel (K, C). init: (B, K-1, C) history."""
+    K = w.shape[0]
+    pad = init if init is not None else jnp.zeros(
+        (xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b), xp[:, -(K - 1):]
+
+
+def _split_proj(params, cfg, x):
+    s, d_in, nh, conv_ch = _dims(cfg)
+    zxbcdt = x @ params["in_proj"]
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + conv_ch]
+    dt = jax.nn.softplus(
+        zxbcdt[..., d_in + conv_ch:].astype(jnp.float32)
+        + params["dt_bias"])  # (B,S,nh)
+    return z, xbc, dt
+
+
+def mamba_chunked(params, cfg: ModelConfig, x: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, MambaState]:
+    """Full-sequence forward; S must be a multiple of cfg.ssm.chunk."""
+    s, d_in, nh, conv_ch = _dims(cfg)
+    B, S, _ = x.shape
+    c = min(s.chunk, S)
+    assert S % c == 0, f"seq {S} not divisible by chunk {c}"
+    NC = S // c
+    hd, ds = s.head_dim, s.d_state
+
+    z, xbc, dt = _split_proj(params, cfg, x)
+    xbc, conv_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"], None)
+    xs = xbc[..., :d_in].reshape(B, S, nh, hd)
+    Bc = xbc[..., d_in:d_in + ds]  # (B,S,ds) single group
+    Cc = xbc[..., d_in + ds:]
+
+    A = -jnp.exp(params["A_log"])  # (nh,)
+    a_log = (dt * A).reshape(B, NC, c, nh)  # log decay per step
+    dt_c = dt.reshape(B, NC, c, nh)
+    x_c = xs.astype(jnp.float32).reshape(B, NC, c, nh, hd)
+    B_c = Bc.astype(jnp.float32).reshape(B, NC, c, ds)
+    C_c = Cc.astype(jnp.float32).reshape(B, NC, c, ds)
+
+    l = jnp.cumsum(a_log, axis=2)  # inclusive (B,NC,c,nh)
+    idt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[s.intra_dtype]
+    # ---- intra-chunk (attention-like, lower-triangular) -------------------
+    CB = jnp.einsum("bntd,bnsd->bnts", C_c.astype(idt), B_c.astype(idt),
+                    preferred_element_type=idt)  # (B,NC,c,c)
+    decay = jnp.exp(l[:, :, :, None, :] - l[:, :, None, :, :])  # f32 exps
+    tri = jnp.tril(jnp.ones((c, c), bool))[None, None, :, :, None]
+    M = (CB[..., None].astype(idt)
+         * jnp.where(tri, decay, 0.0).astype(idt)
+         * dt_c[:, :, None, :, :].astype(idt))
+    y_intra = jnp.einsum("bntsh,bnshp->bnthp", M, x_c.astype(idt),
+                         preferred_element_type=jnp.float32)
+    # ---- chunk-final states ------------------------------------------------
+    decay_end = jnp.exp(l[:, :, -1:, :] - l)  # (B,NC,c,nh)
+    Sk = jnp.einsum("bnshp,bnsd->bnhpd",
+                    x_c * (dt_c * decay_end)[..., None], B_c)  # (B,NC,nh,hd,ds)
+    A_chunk = jnp.exp(l[:, :, -1, :])  # (B,NC,nh)
+
+    # ---- inter-chunk recurrence (scan over chunks) -------------------------
+    def step(h, inp):
+        a_k, s_k = inp  # (B,nh), (B,nh,hd,ds)
+        h_prev = h
+        h = a_k[:, :, None, None] * h + s_k
+        return h, h_prev
+
+    h0 = jnp.zeros((B, nh, hd, ds), jnp.float32)
+    h_last, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(A_chunk, 1, 0), jnp.moveaxis(Sk, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B,NC,nh,hd,ds)
+    y_inter = jnp.einsum("bntd,bnhpd->bnthp", C_c, h_prevs) \
+        * jnp.exp(l)[..., None]
+    y = (y_intra + y_inter).reshape(B, S, nh, hd)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    # gate + norm + out (Mamba2 places the norm after gating)
+    y = rmsnorm(y * jax.nn.silu(z), params["out_norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, MambaState(conv=conv_tail, ssm=h_last)
+
+
+def mamba_decode(params, cfg: ModelConfig, x: jnp.ndarray, state: MambaState
+                 ) -> Tuple[jnp.ndarray, MambaState]:
+    """Single-token recurrent step; x (B,1,d). State is O(1) in context
+    length — why zamba2/xlstm serve the long_500k shape."""
+    s, d_in, nh, conv_ch = _dims(cfg)
+    B = x.shape[0]
+    hd, ds = s.head_dim, s.d_state
+    z, xbc, dt = _split_proj(params, cfg, x)
+    xbc, conv_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                  state.conv)
+    xs = xbc[:, 0, :d_in].reshape(B, nh, hd).astype(jnp.float32)
+    Bc = xbc[:, 0, d_in:d_in + ds].astype(jnp.float32)
+    Cc = xbc[:, 0, d_in + ds:].astype(jnp.float32)
+    dt0 = dt[:, 0]  # (B,nh)
+    a = jnp.exp(dt0 * -jnp.exp(params["A_log"]))  # (B,nh)
+    upd = jnp.einsum("bhp,bd->bhpd", xs * dt0[..., None], Bc)
+    h = a[:, :, None, None] * state.ssm + upd
+    y = jnp.einsum("bhpd,bd->bhp", h, Cc) + params["D"][None, :, None] * xs
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["out_norm"], cfg.norm_eps)
+    return y @ params["out_proj"], MambaState(conv=conv_tail, ssm=h)

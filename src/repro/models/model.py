@@ -1,0 +1,460 @@
+"""The unified LM: init / train-forward / prefill / decode for all ten
+assigned architectures, with scan-over-layers (compile-time O(1) in depth —
+what makes 80 full-config dry-run compiles feasible) or unrolled layers
+(used by the roofline pass to extract exact per-layer costs, since XLA's
+cost_analysis does not multiply while-loop bodies by trip count).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import blocks as B
+from .config import ModelConfig
+from .layers import embed, init_embedding, init_rmsnorm, rmsnorm, truncated_normal
+
+_BLOCKS = {
+    "dense": (B.init_dense_block, B.dense_block),
+    "parallel": (B.init_parallel_block, B.parallel_block),
+    "moe": (B.init_moe_block, B.moe_layer_block),
+}
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    mesh: Any = None  # jax Mesh or None (single device)
+    scan_layers: bool = True
+    remat: bool = False
+    # residual-stream sharding constraint applied at every block boundary
+    # (sequence parallelism when it carries a "model" seq axis); set by the
+    # launch layer per workload
+    act_sharding: Any = None
+
+    def __post_init__(self):
+        # EP padding: pad expert tables to a multiple of the model-axis size
+        # (dummy experts are router-masked; see MoEConfig.num_experts_padded)
+        if (self.cfg.pattern == "moe" and self.mesh is not None
+                and "model" in self.mesh.axis_names):
+            ep = self.mesh.shape["model"]
+            m = self.cfg.moe
+            pad = -(-m.num_experts // ep) * ep
+            if pad != m.padded:
+                self.cfg = dataclasses.replace(
+                    self.cfg, moe=dataclasses.replace(
+                        m, num_experts_padded=pad))
+
+    # ------------------------------------------------------------------
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        if self.mesh is None:
+            return ("data",)
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    @property
+    def pdtype(self):
+        return _dtype(self.cfg.param_dtype)
+
+    @property
+    def cdtype(self):
+        return _dtype(self.cfg.compute_dtype)
+
+    # ------------------------------------------------------------------
+    # parameter init
+    # ------------------------------------------------------------------
+    def init(self, seed: int = 0) -> Dict:
+        cfg, dtype = self.cfg, self.pdtype
+        key = jax.random.PRNGKey(seed)
+        k_emb, k_blocks, k_head, k_extra = jax.random.split(key, 4)
+        params: Dict[str, Any] = {
+            "embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+            "final_norm": init_rmsnorm(cfg.d_model, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = truncated_normal(
+                k_head, (cfg.d_model, cfg.vocab_size), cfg.d_model ** -0.5,
+                dtype)
+
+        def stacked(init_fn, n, key):
+            return jax.vmap(lambda k: init_fn(k, cfg, dtype))(
+                jax.random.split(key, n))
+
+        if cfg.pattern in _BLOCKS:
+            init_fn, _ = _BLOCKS[cfg.pattern]
+            params["blocks"] = stacked(init_fn, cfg.n_layers, k_blocks)
+        elif cfg.pattern == "zamba2":
+            params["mamba"] = stacked(B.init_mamba_block, cfg.n_layers,
+                                      k_blocks)
+            params["shared_attn"] = B.init_shared_attn_block(
+                k_extra, cfg, dtype)
+        elif cfg.pattern == "xlstm":
+            x = cfg.xlstm
+            units = cfg.n_layers // x.slstm_every
+            per_unit_m = x.slstm_every - 1
+            km, ks = jax.random.split(k_blocks)
+            params["mlstm"] = jax.vmap(
+                lambda k: stacked(B.init_mlstm_block, per_unit_m, k))(
+                jax.random.split(km, units))
+            params["slstm"] = stacked(B.init_slstm_block, units, ks)
+        else:
+            raise ValueError(f"unknown pattern {cfg.pattern!r}")
+        return params
+
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree.leaves(params))
+
+    # ------------------------------------------------------------------
+    # positions
+    # ------------------------------------------------------------------
+    def _default_positions(self, batch: int, seq: int, offset=0):
+        pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+        pos = jnp.broadcast_to(pos, (batch, seq))
+        if self.cfg.rope_kind == "mrope":
+            return jnp.broadcast_to(pos[None], (3, batch, seq))
+        return pos
+
+    # ------------------------------------------------------------------
+    # trunk runners
+    # ------------------------------------------------------------------
+    def _block_kw(self):
+        return dict(mesh=self.mesh, batch_axes=self.batch_axes)
+
+    def _maybe_remat(self, fn):
+        return jax.checkpoint(fn) if self.remat else fn
+
+    def _run_stack(self, block_fn, stacked_params, x, positions,
+                   caches=None, decode=False, cache_pos=None):
+        """Run a homogeneous stack. Returns (x, new_caches, aux_sum).
+        In non-decode mode `new_caches` are the per-layer forward states
+        (attention k/v, SSM/LSTM final states) — i.e. the prefill seeds;
+        training simply never reads them (XLA dead-code-eliminates)."""
+        kw = self._block_kw()
+
+        def apply(p, x, c):
+            if self.act_sharding is not None:
+                x = jax.lax.with_sharding_constraint(x, self.act_sharding)
+            y, nc, aux = block_fn(p, self.cfg, x, positions, c,
+                                  decode=decode, cache_pos=cache_pos, **kw)
+            return y, nc, (aux if aux is not None else jnp.zeros(()))
+
+        if self.scan_layers:
+            if decode and caches is not None:
+                # serving: caches ride the loop CARRY and update in place
+                # (dynamic_update_index aliases the donated buffer) — scan
+                # xs/ys would double-buffer the whole KV cache (§Perf
+                # memory iteration: −2× cache footprint on decode)
+                n = jax.tree.leaves(stacked_params)[0].shape[0]
+
+                def body(i, state):
+                    xx, cc = state
+                    p = jax.tree.map(
+                        lambda a: lax.dynamic_index_in_dim(
+                            a, i, 0, keepdims=False), stacked_params)
+                    c = jax.tree.map(
+                        lambda a: lax.dynamic_index_in_dim(
+                            a, i, 0, keepdims=False), cc)
+                    y, nc, _ = apply(p, xx, c)
+                    cc = jax.tree.map(
+                        lambda a, u: lax.dynamic_update_index_in_dim(
+                            a, u.astype(a.dtype), i, 0), cc, nc)
+                    return (y, cc)
+
+                x, new_caches = lax.fori_loop(0, n, body, (x, caches))
+                return x, new_caches, jnp.zeros(())
+
+            if caches is None:
+                def body(carry, p):
+                    y, nc, aux = self._maybe_remat(
+                        lambda pp, xx: apply(pp, xx, None))(p, carry)
+                    return y, (nc, aux)
+            else:
+                def body(carry, inp):
+                    p, c = inp
+                    y, nc, aux = apply(p, carry, c)
+                    return y, (nc, aux)
+
+            xs = stacked_params if caches is None else (stacked_params, caches)
+            x, (new_caches, auxs) = lax.scan(body, x, xs)
+            return x, new_caches, auxs.sum()
+
+        # unrolled path (roofline cost extraction)
+        n = jax.tree.leaves(stacked_params)[0].shape[0]
+        new_caches, aux_sum = [], jnp.zeros(())
+        for i in range(n):
+            p = jax.tree.map(lambda a: a[i], stacked_params)
+            c = None if caches is None else jax.tree.map(
+                lambda a: a[i], caches)
+            x, nc, aux = apply(p, x, c)
+            new_caches.append(nc)
+            aux_sum = aux_sum + aux
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+        return x, stacked, aux_sum
+
+    # ------------------------------------------------------------------
+    def _trunk(self, params, x, positions, caches=None, decode=False,
+               cache_pos=None):
+        cfg = self.cfg
+        aux_total = jnp.zeros(())
+        if cfg.pattern in _BLOCKS:
+            _, block_fn = _BLOCKS[cfg.pattern]
+            x, new_caches, aux_total = self._run_stack(
+                block_fn, params["blocks"], x, positions,
+                caches, decode, cache_pos)
+            return x, new_caches, aux_total
+
+        if cfg.pattern == "zamba2":
+            every = cfg.shared_attn_every
+            L = cfg.n_layers
+            n_apps = -(-L // every)
+            m_caches = None if caches is None else caches["mamba"]
+            a_caches = None if caches is None else caches["attn"]
+            new_m, new_a = [], []
+            kw = self._block_kw()
+            shared_fn = _shared_attn_apply
+            if self.remat and not decode:
+                # the shared block repeats OUTSIDE the scan; without remat
+                # all n_apps applications' activations stay live at once
+                shared_fn = jax.checkpoint(
+                    _shared_attn_apply,
+                    static_argnums=(1, 5, 6, 7, 8),
+                )
+            for a in range(n_apps):
+                ac = None if a_caches is None else jax.tree.map(
+                    lambda t: t[a], a_caches)
+                x, nc, _ = shared_fn(
+                    params["shared_attn"], cfg, x, positions, ac,
+                    decode, cache_pos, kw["mesh"], tuple(kw["batch_axes"]))
+                new_a.append(nc)
+                lo, hi = a * every, min((a + 1) * every, L)
+                seg = jax.tree.map(lambda t: t[lo:hi], params["mamba"])
+                segc = None if m_caches is None else jax.tree.map(
+                    lambda t: t[lo:hi], m_caches)
+                x, nmc, _ = self._run_stack(B.mamba_block, seg, x, positions,
+                                            segc, decode, cache_pos)
+                new_m.append(nmc)
+            new_caches = {
+                "mamba": jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs), *new_m),
+                "attn": jax.tree.map(lambda *xs: jnp.stack(xs), *new_a),
+            }
+            return x, new_caches, aux_total
+
+        if cfg.pattern == "xlstm":
+            units = cfg.n_layers // cfg.xlstm.slstm_every
+            m_caches = None if caches is None else caches["mlstm"]
+            s_caches = None if caches is None else caches["slstm"]
+            new_m, new_s = [], []
+            kw = self._block_kw()
+            for u in range(units):
+                seg = jax.tree.map(lambda t: t[u], params["mlstm"])
+                segc = None if m_caches is None else jax.tree.map(
+                    lambda t: t[u], m_caches)
+                x, nmc, _ = self._run_stack(B.mlstm_block, seg, x, positions,
+                                            segc, decode, cache_pos)
+                new_m.append(nmc)
+                sp = jax.tree.map(lambda t: t[u], params["slstm"])
+                sc = None if s_caches is None else jax.tree.map(
+                    lambda t: t[u], s_caches)
+                x, nsc, _ = B.slstm_block(sp, cfg, x, positions, sc,
+                                          decode=decode, **kw)
+                new_s.append(nsc)
+            new_caches = {
+                "mlstm": jax.tree.map(lambda *xs: jnp.stack(xs), *new_m),
+                "slstm": jax.tree.map(lambda *xs: jnp.stack(xs), *new_s),
+            }
+            return x, new_caches, aux_total
+
+        raise ValueError(cfg.pattern)
+
+    # ------------------------------------------------------------------
+    # public entry points
+    # ------------------------------------------------------------------
+    def forward(self, params, tokens=None, embeds=None, positions=None,
+                caches=None, decode=False, cache_pos=None, head=True):
+        """Trunk + head. `embeds` (B,S,d) bypasses token embedding — the
+        modality-frontend stub path for qwen2-vl / musicgen. head=False
+        returns the final-norm hidden states (chunked-loss path)."""
+        cfg = self.cfg
+        if embeds is None:
+            x = embed(params["embed"], tokens).astype(self.cdtype)
+        else:
+            x = embeds.astype(self.cdtype)
+        Bsz, S = x.shape[0], x.shape[1]
+        if positions is None:
+            off = cache_pos if decode and cache_pos is not None else 0
+            positions = self._default_positions(Bsz, S, offset=off)
+        x, new_caches, aux = self._trunk(params, x, positions, caches,
+                                         decode, cache_pos)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        if not head:
+            return x, new_caches, aux
+        hd = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = (x @ (hd.T if cfg.tie_embeddings else hd)
+                  ).astype(jnp.float32)
+        return logits, new_caches, aux
+
+    # logits chunking kicks in when S·V exceeds this (≈0.5G f32 elements
+    # globally): the full (B,S,V) logits are never materialized — §Perf
+    # memory iteration (see EXPERIMENTS.md)
+    LOSS_CHUNK_THRESHOLD = 2 ** 29
+    LOSS_CHUNK = 512
+
+    def loss_fn(self, params, batch):
+        """Next-token CE (+ MoE aux). batch: tokens/targets (B,S) [+ embeds].
+        Large vocab×seq uses a chunked (never-materialized) cross-entropy."""
+        cfg = self.cfg
+        targets = batch["targets"]
+        Bsz, S = targets.shape
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        chunked = (S * cfg.vocab_size >= self.LOSS_CHUNK_THRESHOLD
+                   and S % self.LOSS_CHUNK == 0 and batch.get("mask") is None)
+        if not chunked:
+            logits, _, aux = self.forward(
+                params, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"))
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, targets[..., None],
+                                       axis=-1)[..., 0]
+            nll = logz - gold
+            mask = batch.get("mask")
+            if mask is None:
+                loss = nll.mean()
+            else:
+                loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+        else:
+            hidden, _, aux = self.forward(
+                params, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"), head=False)
+            C = self.LOSS_CHUNK
+            NC = S // C
+            hc = jnp.moveaxis(hidden.reshape(Bsz, NC, C, -1), 1, 0)
+            tc = jnp.moveaxis(targets.reshape(Bsz, NC, C), 1, 0)
+
+            @jax.checkpoint
+            def chunk_nll(carry, inp):
+                h, t = inp
+                lg = (h @ (head.T if cfg.tie_embeddings else head)
+                      ).astype(jnp.float32)
+                logz = jax.nn.logsumexp(lg, axis=-1)
+                gold = jnp.take_along_axis(lg, t[..., None], axis=-1)[..., 0]
+                return carry + (logz - gold).sum(), None
+
+            total_nll, _ = lax.scan(chunk_nll, jnp.zeros(()), (hc, tc))
+            loss = total_nll / (Bsz * S)
+        w = cfg.moe.aux_loss_weight if cfg.moe else 0.0
+        return loss + w * aux, {"nll": loss, "aux": aux}
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+    def init_caches(self, batch: int, max_len: int, like=jnp.zeros):
+        """Decode-state pytree (zeros or ShapeDtypeStruct via `like`)."""
+        cfg = self.cfg
+        dt = self.cdtype
+        L = cfg.n_layers
+
+        def attn_cache(n):
+            return (
+                like((n, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt),
+                like((n, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt),
+            )
+
+        if cfg.pattern in _BLOCKS:
+            return attn_cache(L)
+        if cfg.pattern == "zamba2":
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            nh = d_in // s.head_dim
+            conv_ch = d_in + 2 * s.d_state
+            n_apps = -(-L // cfg.shared_attn_every)
+            return {
+                "mamba": B.MambaState(
+                    conv=like((L, batch, s.d_conv - 1, conv_ch), dt),
+                    ssm=like((L, batch, nh, s.head_dim, s.d_state),
+                             jnp.float32),
+                ),
+                "attn": attn_cache(n_apps),
+            }
+        if cfg.pattern == "xlstm":
+            x = cfg.xlstm
+            units = L // x.slstm_every
+            per_m = x.slstm_every - 1
+            d_up = int(cfg.d_model * x.proj_factor)
+            nh = cfg.n_heads
+            hd = d_up // nh
+            from .xlstm import MLSTMState, SLSTMState
+
+            return {
+                "mlstm": (
+                    MLSTMState(
+                        C=like((units, per_m, batch, nh, hd, hd), jnp.float32),
+                        n=like((units, per_m, batch, nh, hd), jnp.float32),
+                        m=like((units, per_m, batch, nh), jnp.float32),
+                    ),
+                    like((units, per_m, batch, 3, d_up), dt),
+                ),
+                "slstm": SLSTMState(
+                    c=like((units, batch, cfg.d_model), jnp.float32),
+                    n=like((units, batch, cfg.d_model), jnp.float32),
+                    m=like((units, batch, cfg.d_model), jnp.float32),
+                    h=like((units, batch, cfg.d_model), jnp.float32),
+                ),
+            }
+        raise ValueError(cfg.pattern)
+
+    def prefill(self, params, tokens=None, embeds=None, max_len=None):
+        """Full-sequence forward seeding decode caches (inference-prefill).
+        One pass: blocks already emit their forward states (attention k/v,
+        SSM/LSTM carries); attention k/v get padded into max_len buffers."""
+        cfg = self.cfg
+        x = tokens if tokens is not None else embeds
+        Bsz, S = x.shape[0], x.shape[1]
+        max_len = max_len or S
+        logits, states, _ = self.forward(params, tokens=tokens, embeds=embeds,
+                                         caches=None, decode=False)
+
+        def pad_kv(kv_pair, n):
+            k, v = kv_pair
+            buf_k = jnp.zeros((n, Bsz, max_len, cfg.n_kv_heads, cfg.head_dim),
+                              self.cdtype)
+            buf_v = jnp.zeros_like(buf_k)
+            return (
+                lax.dynamic_update_slice_in_dim(
+                    buf_k, k.astype(self.cdtype), 0, axis=2),
+                lax.dynamic_update_slice_in_dim(
+                    buf_v, v.astype(self.cdtype), 0, axis=2),
+            )
+
+        if cfg.pattern in _BLOCKS:
+            caches = pad_kv(states, cfg.n_layers)
+        elif cfg.pattern == "zamba2":
+            n_apps = -(-cfg.n_layers // cfg.shared_attn_every)
+            caches = {
+                "mamba": states["mamba"],
+                "attn": pad_kv(states["attn"], n_apps),
+            }
+        else:  # xlstm: states are O(1) carries already
+            caches = states
+        return logits[:, -1:], caches
+
+    def decode_step(self, params, caches, tokens=None, embeds=None,
+                    cache_pos=0):
+        logits, new_caches, _ = self.forward(
+            params, tokens=tokens, embeds=embeds, caches=caches,
+            decode=True, cache_pos=cache_pos)
+        return logits, new_caches
+
+
+def _shared_attn_apply(params, cfg, x, positions, cache, decode,
+                       cache_pos, mesh, batch_axes):
+    return B.dense_block(params, cfg, x, positions, cache, decode=decode,
+                         cache_pos=cache_pos, mesh=mesh, batch_axes=batch_axes)

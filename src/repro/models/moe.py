@@ -1,0 +1,173 @@
+"""MoE block with TD-Orch push-pull dispatch as a first-class feature.
+
+Routing skew across experts is the paper's data-hot-spot problem verbatim
+(tokens = lambda-tasks, experts = data chunks). The dispatch engine is
+selectable per-config — "tdorch" (push-pull), "push" (classic expert
+parallelism with capacity drops), "pull" (replicate all experts), "dense"
+(single-shard oracle) — so the §2.3 comparison runs inside a real model.
+
+Train/prefill: tokens sequence-split over the model axis (shard_map island),
+experts sharded over the same axis; dispatch = capacity-bounded all_to_all
+(+ hot-expert pull). Decode: tokens are few — each shard computes only its
+local experts' assignments and a psum combines (merge-able write-back).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..core.spmd import (
+    MoEDispatchConfig,
+    detect_contention,
+    grouped_swiglu,
+    moe_direct_pull,
+    moe_direct_push,
+    moe_push_pull,
+    moe_reference,
+    _sort_by_group,
+)
+from .config import ModelConfig
+from .layers import truncated_normal
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.padded
+    ks = jax.random.split(key, 3)
+    return {
+        "router": truncated_normal(ks[0], (d, E), d ** -0.5, jnp.float32),
+        "w_in": truncated_normal(ks[1], (E, d, 2 * f), d ** -0.5, dtype),
+        "w_out": truncated_normal(ks[2], (E, f, d), f ** -0.5, dtype),
+    }
+
+
+def _route(params, cfg: ModelConfig, x2d: jnp.ndarray):
+    """Top-k routing with softmax-over-selected gates + aux load loss."""
+    m = cfg.moe
+    logits = (x2d.astype(jnp.float32) @ params["router"])  # (T, E_pad)
+    if m.padded != m.num_experts:  # dummy padding experts never win
+        logits = logits.at[:, m.num_experts:].set(-1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = lax.top_k(probs, m.top_k)
+    gates = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    # standard switch-style aux loss: E · Σ_e f_e · P_e
+    E = m.num_experts
+    f_e = jnp.zeros((m.padded,)).at[top_i.reshape(-1)].add(1.0) / top_i.size
+    P_e = probs.mean(0)
+    aux = E * jnp.sum(f_e * P_e)
+    return top_i.astype(jnp.int32), gates.astype(x2d.dtype), aux
+
+
+def _dispatch_cfg(cfg: ModelConfig, axis_name, ep_size) -> MoEDispatchConfig:
+    m = cfg.moe
+    return MoEDispatchConfig(
+        num_experts=m.padded,
+        top_k=m.top_k,
+        capacity_factor=m.capacity_factor,
+        num_hot=m.num_hot if m.dispatch == "tdorch" else 0,
+        axis_name=axis_name,
+        ep_size=ep_size,
+        gemm_impl=m.gemm_impl,
+    )
+
+
+def _dispatch_local(params, cfg, x2d, top_i, gates, axis_name, ep_size):
+    d_cfg = _dispatch_cfg(cfg, axis_name, ep_size)
+    kind = cfg.moe.dispatch
+    if kind == "tdorch":
+        y, aux = moe_push_pull(x2d, top_i, gates, params["w_in"],
+                               params["w_out"], d_cfg)
+    elif kind == "push":
+        y, aux = moe_direct_push(x2d, top_i, gates, params["w_in"],
+                                 params["w_out"], d_cfg)
+    elif kind == "pull":
+        y, aux = moe_direct_pull(x2d, top_i, gates, params["w_in"],
+                                 params["w_out"], d_cfg)
+    elif kind == "dense":
+        y = moe_reference(x2d, top_i, gates, params["w_in"], params["w_out"])
+        aux = None
+    else:
+        raise ValueError(f"unknown dispatch {kind!r}")
+    return y
+
+
+def moe_block(params, cfg: ModelConfig, x: jnp.ndarray,
+              mesh=None, batch_axes: Tuple[str, ...] = ("data",),
+              decode: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss). If mesh has a >1 'model' axis, runs the
+    distributed dispatch inside a shard_map island; otherwise single-shard."""
+    B, S, d = x.shape
+    m = cfg.moe
+    ep = 1 if mesh is None else mesh.shape["model"]
+
+    if mesh is None or ep == 1:
+        x2d = x.reshape(B * S, d)
+        top_i, gates, aux = _route(params, cfg, x2d)
+        y = _dispatch_local(params, cfg, x2d, top_i, gates, None, 1)
+        return y.reshape(B, S, d), aux
+
+    if decode or S % ep != 0:
+        return _moe_decode_psum(params, cfg, x, mesh, batch_axes)
+
+    # ---- train/prefill: sequence-split tokens over the model axis --------
+    def body(xb, router, w_in, w_out):
+        Bl, Sl, _ = xb.shape
+        x2d = xb.reshape(Bl * Sl, d)
+        top_i, gates, aux = _route({"router": router}, cfg, x2d)
+        aux = lax.pmean(aux, "model")
+        p = {"w_in": w_in, "w_out": w_out}
+        y = _dispatch_local(p, cfg, x2d, top_i, gates, "model", ep)
+        return y.reshape(Bl, Sl, d), aux
+
+    y, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(batch_axes, "model", None), P(), P("model"), P("model")),
+        out_specs=(P(batch_axes, "model", None), P()),
+        check_vma=False,
+    )(x, params["router"], params["w_in"], params["w_out"])
+    return y, aux
+
+
+def _moe_decode_psum(params, cfg, x, mesh, batch_axes):
+    """Decode-time MoE: tokens replicated over the model axis; each shard
+    computes its local experts' share; psum = the merge-able ⊙ combine."""
+    B, S, d = x.shape
+    ep = mesh.shape["model"]
+    m = cfg.moe
+    e_local = m.padded // ep
+
+    def body(xb, router, w_in, w_out):
+        Bl = xb.shape[0]
+        x2d = xb.reshape(Bl * S, d)
+        top_i, gates, aux = _route({"router": router}, cfg, x2d)
+        shard = lax.axis_index("model")
+        A = top_i.size
+        flat_e = top_i.reshape(A)
+        flat_g = gates.reshape(A)
+        token_of = jnp.repeat(jnp.arange(Bl * S, dtype=jnp.int32), m.top_k)
+        local = flat_e - shard * e_local
+        mine = (local >= 0) & (local < e_local)
+        grp = jnp.where(mine, local, e_local).astype(jnp.int32)
+        order, sizes = _sort_by_group(grp, e_local)
+        out = grouped_swiglu(x2d[token_of[order]], w_in, w_out, sizes,
+                             impl=m.gemm_impl)
+        g = jnp.where(mine, flat_g, 0.0)[order]
+        y = jnp.zeros((Bl * S, d), x.dtype).at[token_of[order]].add(
+            out * g[:, None])
+        y = lax.psum(y, "model")
+        return y.reshape(Bl, S, d), lax.pmean(aux, "model")
+
+    y, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(batch_axes, None, None), P(), P("model"), P("model")),
+        out_specs=(P(batch_axes, None, None), P()),
+        check_vma=False,
+    )(x, params["router"], params["w_in"], params["w_out"])
+    return y, aux

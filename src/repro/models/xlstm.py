@@ -1,0 +1,260 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, true recurrence), both with exponential gating and
+max-stabilizers. Attention-free ⇒ xlstm-350m serves the long_500k shape with
+O(1)-in-context decode state.
+
+mLSTM cell (per head):
+    m_t = max(f̃_t + m_{t-1}, ĩ_t)
+    C_t = e^{f̃_t+m_{t-1}-m_t} C_{t-1} + e^{ĩ_t-m_t} v_t k_tᵀ
+    n_t = e^{f̃_t+m_{t-1}-m_t} n_{t-1} + e^{ĩ_t-m_t} k_t
+    h_t = (C_tᵀ q_t) / max(|n_tᵀ q_t|, 1)
+Chunkwise: intra-chunk quadratic stabilized weights + (C, n, m) carried
+across chunks by lax.scan — linear in sequence length (the TPU-native
+adaptation: chunk matmuls sized for the MXU, scalar carries in VREGs).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rmsnorm, truncated_normal
+
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray  # (B, H, hd, hd) stabilized matrix memory
+    n: jnp.ndarray  # (B, H, hd)
+    m: jnp.ndarray  # (B, H) running max-stabilizer
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray  # (B, d)
+    n: jnp.ndarray  # (B, d)
+    m: jnp.ndarray  # (B, d)
+    h: jnp.ndarray  # (B, d) previous hidden (recurrent input)
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    d_up = int(cfg.d_model * cfg.xlstm.proj_factor)
+    nh = cfg.n_heads
+    return d_up, nh, d_up // nh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_up, nh, hd = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    std = d ** -0.5
+    su = d_up ** -0.5
+    return {
+        "up": truncated_normal(ks[0], (d, 2 * d_up), std, dtype),
+        "conv_w": truncated_normal(ks[1], (4, d_up), 0.1, dtype),
+        "conv_b": jnp.zeros((d_up,), dtype),
+        "wq": truncated_normal(ks[2], (d_up, d_up), su, dtype),
+        "wk": truncated_normal(ks[3], (d_up, d_up), su, dtype),
+        "wv": truncated_normal(ks[4], (d_up, d_up), su, dtype),
+        "w_gates": truncated_normal(ks[5], (d_up, 2 * nh), su, dtype),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((nh,)), jnp.full((nh,), 3.0)]).astype(jnp.float32),
+        "out_norm": jnp.ones((d_up,), dtype),
+        "down": truncated_normal(ks[6], (d_up, d), su, dtype),
+    }
+
+
+def _mlstm_qkv(params, cfg, x, conv_init):
+    """x: (B,S,d) → q,k,v (B,S,H,hd), gate pre-acts (B,S,H), new conv tail."""
+    d_up, nh, hd = _mlstm_dims(cfg)
+    B, S, _ = x.shape
+    u, z = jnp.split(x @ params["up"], 2, axis=-1)
+    # causal depthwise conv feeding q/k (xLSTM Fig. 10 block structure)
+    K = params["conv_w"].shape[0]
+    pad = conv_init if conv_init is not None else jnp.zeros(
+        (B, K - 1, d_up), u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    conv = sum(up[:, i:i + S] * params["conv_w"][i] for i in range(K))
+    conv = jax.nn.silu(conv + params["conv_b"])
+    q = (conv @ params["wq"]).reshape(B, S, nh, hd)
+    k = (conv @ params["wk"]).reshape(B, S, nh, hd) * (hd ** -0.5)
+    v = (u @ params["wv"]).reshape(B, S, nh, hd)
+    gates = (u @ params["w_gates"]).astype(jnp.float32) + params["b_gates"]
+    i_pre, f_pre = jnp.split(gates.reshape(B, S, 2, nh), 2, axis=2)
+    return q, k, v, i_pre[:, :, 0], f_pre[:, :, 0], z, up[:, -(K - 1):]
+
+
+def mlstm_chunked(params, cfg: ModelConfig, x: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, MLSTMState]:
+    """Chunkwise mLSTM, mamba-style structure: ALL quadratic intra-chunk
+    work is vectorized over chunks (batched einsums — fully counted by HLO
+    cost analysis and fully parallel); only the (C, n, m) carry rides a
+    lax.scan, which emits the per-chunk incoming states for one big
+    vectorized inter-chunk contraction afterwards."""
+    d_up, nh, hd = _mlstm_dims(cfg)
+    B, S, _ = x.shape
+    c = min(cfg.xlstm.chunk, S)
+    assert S % c == 0, f"seq {S} not divisible by chunk {c}"
+    NC = S // c
+    q, k, v, i_pre, f_pre, z, conv_tail = _mlstm_qkv(params, cfg, x, None)
+    f_log = jax.nn.log_sigmoid(f_pre)  # (B,S,H)
+
+    def r(t):  # (B,S,...) -> (B,NC,c,...)
+        return t.reshape(B, NC, c, *t.shape[2:])
+
+    qc = r(q.astype(jnp.float32))
+    kc = r(k.astype(jnp.float32))
+    vc = r(v.astype(jnp.float32))
+    ik, fk = r(i_pre), r(f_log)  # (B,NC,c,H)
+
+    # ---- intra-chunk, vectorized over chunks ------------------------------
+    b = jnp.cumsum(fk, axis=2)  # inclusive forget cumsum (B,NC,c,H)
+    w = b[:, :, :, None, :] - b[:, :, None, :, :] + ik[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((c, c), bool))[None, None, :, :, None]
+    w = jnp.where(tri, w, -jnp.inf)
+    m_intra = jnp.max(w, axis=3)  # (B,NC,c,H) local stabilizer
+    wstab = jnp.exp(w - m_intra[:, :, :, None, :])
+    qkT = jnp.einsum("bnthd,bnshd->bntsh", qc, kc)
+    num_i = jnp.einsum("bntsh,bntsh,bnshd->bnthd", qkT, wstab, vc)
+    n_i = jnp.einsum("bntsh,bnshd->bnthd", wstab, kc)
+    # chunk summaries with local stabilizer m_loc (B,NC,H)
+    b_end = b[:, :, -1, :]  # (B,NC,H)
+    w_end = b_end[:, :, None, :] - b + ik  # (B,NC,c,H)
+    m_loc = jnp.max(w_end, axis=2)
+    s_stab = jnp.exp(w_end - m_loc[:, :, None, :])
+    S_C = jnp.einsum("bnsh,bnshd,bnshe->bnhde", s_stab, vc, kc)
+    S_n = jnp.einsum("bnsh,bnshd->bnhd", s_stab, kc)
+
+    # ---- carry scan over chunks (small per-step work) ---------------------
+    def step(carry, inp):
+        C0, n0, m0 = carry
+        sc, sn, ml, be = inp  # per-chunk summaries
+        m1 = jnp.maximum(be + m0, ml)
+        d_old = jnp.exp(be + m0 - m1)
+        d_new = jnp.exp(ml - m1)
+        C1 = d_old[..., None, None] * C0 + d_new[..., None, None] * sc
+        n1 = d_old[..., None] * n0 + d_new[..., None] * sn
+        return (C1, n1, m1), (C0, n0, m0)
+
+    C0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, nh, hd), jnp.float32)
+    m0 = jnp.full((B, nh), -jnp.inf, jnp.float32)
+    mv = lambda t: jnp.moveaxis(t, 1, 0)
+    (C1, n1, m1), (Cp, np_, mp) = jax.lax.scan(
+        step, (C0, n0, m0),
+        (mv(S_C), mv(S_n), mv(m_loc), mv(b_end)))
+    Cp, np_, mp = mv(Cp), mv(np_), mv(mp)  # (B,NC,H,...) incoming states
+
+    # ---- inter-chunk contribution, vectorized over chunks -----------------
+    carry_log = b + mp[:, :, None, :]  # (B,NC,c,H)
+    m_t = jnp.maximum(m_intra, carry_log)
+    scale_i = jnp.exp(m_intra - m_t)[..., None]
+    cstab = jnp.exp(carry_log - m_t)[..., None]
+    num = num_i * scale_i + cstab * jnp.einsum("bnthd,bnhed->bnthe", qc, Cp)
+    n_t = n_i * scale_i + cstab * np_[:, :, None]
+    den = jnp.maximum(jnp.abs(jnp.einsum("bnthd,bnthd->bnth", qc, n_t)), 1.0)
+    h = (num / den[..., None]).reshape(B, S, d_up).astype(x.dtype)
+    h = rmsnorm(h, params["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = h @ params["down"]
+    return out, (MLSTMState(C=C1, n=n1, m=m1), conv_tail)
+
+
+def mlstm_decode(params, cfg: ModelConfig, x, state: MLSTMState,
+                 conv_tail: jnp.ndarray):
+    d_up, nh, hd = _mlstm_dims(cfg)
+    B = x.shape[0]
+    q, k, v, i_pre, f_log_pre, z, new_tail = _mlstm_qkv(
+        params, cfg, x, conv_tail)
+    f_log = jax.nn.log_sigmoid(f_log_pre)
+    qk = q[:, 0].astype(jnp.float32)
+    kk = k[:, 0].astype(jnp.float32)
+    vk = v[:, 0].astype(jnp.float32)
+    ik, fk = i_pre[:, 0], f_log[:, 0]  # (B,H)
+    m_t = jnp.maximum(fk + state.m, ik)
+    fs = jnp.exp(fk + state.m - m_t)
+    is_ = jnp.exp(ik - m_t)
+    C = fs[..., None, None] * state.C + is_[..., None, None] \
+        * jnp.einsum("bhd,bhe->bhde", vk, kk)
+    n = fs[..., None] * state.n + is_[..., None] * kk
+    num = jnp.einsum("bhde,bhe->bhd", C, qk)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qk)), 1.0)
+    h = (num / den[..., None]).reshape(B, 1, d_up).astype(x.dtype)
+    h = rmsnorm(h, params["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return h @ params["down"], MLSTMState(C=C, n=n, m=m_t), new_tail
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (true recurrence; lax.scan over time)
+# ---------------------------------------------------------------------------
+def init_slstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    f = int(d * cfg.xlstm.ff_factor)
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    return {
+        "w_in": truncated_normal(ks[0], (d, 4 * d), std, dtype),
+        # per-head recurrent kernels (block-diagonal R, one (hd,hd) per gate)
+        "r": truncated_normal(ks[1], (4, nh, hd, hd), hd ** -0.5, jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((3 * d,)),
+                              jnp.full((d,), 3.0)]).astype(jnp.float32),
+        "ffn_up": truncated_normal(ks[2], (d, 2 * f), std, dtype),
+        "ffn_down": truncated_normal(ks[3], (f, d), f ** -0.5, dtype),
+        "norm_ffn": jnp.ones((d,), dtype),
+    }
+
+
+def _slstm_cell(params, cfg, xt, st: SLSTMState, wx=None) -> Tuple[jnp.ndarray, SLSTMState]:
+    """One timestep; xt (B,d). `wx` = precomputed input projection (the
+    time scan hoists it so the big GEMM runs once, outside the scan)."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    B = xt.shape[0] if xt is not None else wx.shape[0]
+    if wx is None:
+        wx = (xt @ params["w_in"]).astype(jnp.float32) + params["b"]
+    h_heads = st.h.reshape(B, nh, hd).astype(jnp.float32)
+    rh = jnp.einsum("ghde,bhe->gbhd", params["r"], h_heads).reshape(4, B, d)
+    zt, it, ot, ft = [wx[..., i * d:(i + 1) * d] + rh[i] for i in range(4)]
+    z = jnp.tanh(zt)
+    o = jax.nn.sigmoid(ot)
+    f_log = jax.nn.log_sigmoid(ft)
+    m_t = jnp.maximum(f_log + st.m, it)
+    i_s = jnp.exp(it - m_t)
+    f_s = jnp.exp(f_log + st.m - m_t)
+    c = f_s * st.c + i_s * z
+    n = f_s * st.n + i_s
+    h = o * (c / jnp.maximum(n, 1e-6))
+    return h, SLSTMState(c=c, n=n, m=m_t, h=h)
+
+
+def slstm_forward(params, cfg: ModelConfig, x: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, SLSTMState]:
+    B, S, d = x.shape
+    st0 = SLSTMState(*(jnp.zeros((B, d), jnp.float32) for _ in range(2)),
+                     m=jnp.full((B, d), -jnp.inf, jnp.float32),
+                     h=jnp.zeros((B, d), jnp.float32))
+    # hoist the input GEMM out of the recurrence (S× fewer weight reads)
+    wx_all = (x @ params["w_in"]).astype(jnp.float32) + params["b"]
+
+    def step(st, wx):
+        h, st = _slstm_cell(params, cfg, None, st, wx=wx)
+        return st, h
+
+    st1, hs = jax.lax.scan(step, st0, jnp.moveaxis(wx_all, 0, 1))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    # post-up FFN (GeLU-gated, xLSTM block design)
+    y = rmsnorm(h, params["norm_ffn"], cfg.norm_eps)
+    u, g = jnp.split(y @ params["ffn_up"], 2, axis=-1)
+    return (jax.nn.gelu(g) * u) @ params["ffn_down"], st1
+
+
+def slstm_decode(params, cfg: ModelConfig, x, st: SLSTMState):
+    h, st1 = _slstm_cell(params, cfg, x[:, 0], st)
+    h = h[:, None].astype(x.dtype)
+    y = rmsnorm(h, params["norm_ffn"], cfg.norm_eps)
+    u, g = jnp.split(y @ params["ffn_up"], 2, axis=-1)
+    return (jax.nn.gelu(g) * u) @ params["ffn_down"], st1

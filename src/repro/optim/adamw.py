@@ -1,0 +1,83 @@
+"""AdamW with warmup+cosine schedule, built for sharded training: the (m, v)
+moments are f32 pytrees mirroring the params, and the launch layer shards
+them over the data axis (ZeRO-1) via out_shardings — this module stays pure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_schedule(step: jnp.ndarray, cfg: AdamWConfig) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.peak_lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    from .clip import clip_by_global_norm
+
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = lr_schedule(step, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {
+        "m": tdef.unflatten([o[1] for o in out]),
+        "v": tdef.unflatten([o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

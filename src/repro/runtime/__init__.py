@@ -1,0 +1,9 @@
+from .compression import CompressionState, compress_gradients, decompress
+from .failures import FailureInjector, HeartbeatMonitor, StragglerDetector
+from .trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "CompressionState", "compress_gradients", "decompress",
+    "FailureInjector", "HeartbeatMonitor", "StragglerDetector",
+    "Trainer", "TrainerConfig",
+]

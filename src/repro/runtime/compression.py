@@ -1,0 +1,82 @@
+"""int8 block-quantized gradient compression with error feedback.
+
+DP gradient all-reduce at pod scale is bandwidth-bound; int8 quantization
+cuts the wire volume 4× (vs f32 moments' inputs / 2× vs bf16). Error
+feedback (residual carried to the next step) keeps SGD-style convergence:
+    q_t = Q(g_t + e_{t-1});  e_t = (g_t + e_{t-1}) − q_t
+Block scale = max-abs per 256-value block, so one outlier only damages its
+own block (same reasoning as the paper's per-chunk contention bound: cap the
+blast radius of a heavy item).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class CompressionState(NamedTuple):
+    residual: Any  # pytree of f32 error-feedback buffers
+
+
+def init_compression_state(grads) -> CompressionState:
+    return CompressionState(
+        residual=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                              grads))
+
+
+def _quant(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_gradients(grads, state: CompressionState):
+    """Returns (quantized pytree of (q, scale), new_state). The caller
+    all-reduces the int8 payload (+ f32 scales, 1/256 the volume)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, scale = _quant(x)
+        approx = _dequant(q, scale, g.shape)
+        return (q, scale), x - approx
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(state.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    payload = tdef.unflatten([o[0] for o in out])
+    new_state = CompressionState(
+        residual=tdef.unflatten([o[1] for o in out]))
+    return payload, new_state
+
+
+def decompress(payload, like):
+    flat_p, tdef = jax.tree.flatten(like)
+    flat_q = tdef.flatten_up_to(payload)
+    return tdef.unflatten([
+        _dequant(q, s, p.shape).astype(p.dtype)
+        for (q, s), p in zip(flat_q, flat_p)])
+
+
+def wire_bytes(payload) -> int:
+    """Bytes an all-reduce of the compressed payload would move per hop."""
+    total = 0
+    for q, s in jax.tree.leaves(payload, is_leaf=lambda x: isinstance(x, tuple)):
+        total += q.size + s.size * 4
+    return total

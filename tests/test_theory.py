@@ -1,0 +1,99 @@
+"""Theorem 1 property tests: the bounds themselves, measured across scales
+and adversarial workloads (hypothesis-driven where randomized)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DataStore, TaskBatch, orchestration
+from repro.kernels.flash_decode.kernel import flash_decode
+from repro.kernels.flash_decode.ref import decode_attention_ref
+
+
+def _run(P, n, keys, B=16, sigma=2):
+    tasks = TaskBatch(contexts=np.zeros((n, sigma)), read_keys=keys,
+                      origin=TaskBatch.even_origins(n, P))
+    store = DataStore.create(int(keys.max()) + 1, P, value_width=1,
+                             chunk_words=B)
+    return orchestration(tasks, lambda c, v: {"update": np.ones((n, 1))},
+                         store, write_back="add")
+
+
+class TestTheorem1Scaling:
+    def test_weak_scaling_comm_per_task_bounded(self):
+        """Thm 1(i): comm time O((n/P)(min{B,σ} + log_{n/P} P)) — per-task
+        max-comm stays under the bound's shape (σ + headers·tree-height)
+        as (n, P) scale together, even with half the mass on ONE key."""
+        from repro.core import CommForest
+
+        rng = np.random.default_rng(0)
+        for P in [4, 8, 16, 32]:
+            n = 4000 * P
+            keys = np.where(rng.random(n) < 0.5, 0,
+                            rng.integers(0, 50 * P, n))
+            res = _run(P, n, keys)
+            per_task = res.report.comm_time / (n / P)
+            height = CommForest.build(P).height
+            bound = (2 + 2) * (height + 1) + 2  # (σ+hdr)·hops + result
+            assert per_task <= bound, (P, per_task, bound)
+
+    def test_executed_tasks_theta_n_over_p(self):
+        """Thm 1(ii): each machine executes Θ(n/P) whp — across seeds."""
+        rng = np.random.default_rng(1)
+        for seed in range(5):
+            P, n = 16, 32_000
+            gamma = 1.2 + seed * 0.4
+            ranks = np.arange(1, 2049, dtype=np.float64) ** (-gamma)
+            keys = rng.choice(2048, size=n, p=ranks / ranks.sum())
+            res = _run(P, n, keys)
+            per = np.bincount(res.exec_site, minlength=P)
+            assert per.max() <= 4 * n / P, (gamma, per.max() * P / n)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 1000), hot_frac=st.floats(0.1, 0.95))
+    def test_property_adversarial_hot_fraction(self, seed, hot_frac):
+        """Any hot-key mass fraction: TD-Orch max-comm stays O(n/P)-scale."""
+        rng = np.random.default_rng(seed)
+        P, n = 16, 16_000
+        keys = np.where(rng.random(n) < hot_frac, 0,
+                        rng.integers(0, 1024, n))
+        res = _run(P, n, keys)
+        # bound: a small multiple of (n/P)·(σ + headers + log factor)
+        assert res.report.comm_time < 12 * (n / P) * (2 + 2 + 4)
+
+    def test_inductive_execution_balance(self):
+        """Thm 1 'inductive': task placement stays balanced AFTER a stage so
+        the next stage starts balanced — exec sites are the next origins."""
+        rng = np.random.default_rng(3)
+        P, n = 16, 32_000
+        keys = rng.integers(0, 8, n)  # extreme: 8 keys for 32k tasks
+        res = _run(P, n, keys)
+        # re-run a second stage FROM the first stage's placement
+        tasks2 = TaskBatch(contexts=np.zeros((n, 2)),
+                           read_keys=rng.integers(0, 8, n),
+                           origin=res.exec_site)
+        store2 = DataStore.create(8, P, value_width=1, chunk_words=16)
+        res2 = orchestration(tasks2, lambda c, v: {"update": np.ones((n, 1))},
+                             store2, write_back="add")
+        per = np.bincount(res2.exec_site, minlength=P)
+        assert per.max() <= 4 * n / P
+
+
+class TestFlashDecodeKernel:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 500),
+           shape=st.sampled_from([(4, 2, 64, 256), (8, 8, 32, 512),
+                                  (4, 1, 64, 128)]))
+    def test_property_vs_ref(self, seed, shape):
+        import jax.numpy as jnp
+
+        H, KV, hd, T = shape
+        rng = np.random.default_rng(seed)
+        L = int(rng.integers(1, T + 1))
+        B = 2
+        q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+        got = flash_decode(q, k, v, L, block_t=64, interpret=True)
+        want = decode_attention_ref(q, k, v, L)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
