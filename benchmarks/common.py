@@ -1,6 +1,8 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, Dict, List
 
@@ -26,3 +28,15 @@ def print_csv(rows: List[Dict]) -> None:
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+def write_json(path: str, suite: str, rows: List[Dict]) -> str:
+    """Write one suite's rows as BENCH_<suite>.json under `path` (a
+    directory, created if needed) so the perf trajectory is machine-readable
+    across PRs."""
+    os.makedirs(path, exist_ok=True)
+    out = os.path.join(path, f"BENCH_{suite}.json")
+    with open(out, "w") as fh:
+        json.dump({"suite": suite, "rows": rows}, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return out

@@ -18,7 +18,7 @@ import time
 
 from . import (bench_ablation, bench_breakdown, bench_graph, bench_kernels,
                bench_moe, bench_scaling, bench_ycsb)
-from .common import print_csv
+from .common import print_csv, write_json
 
 SUITES = {
     "ycsb": bench_ycsb,
@@ -35,12 +35,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all", choices=["all", *SUITES])
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write each suite's rows as PATH/BENCH_<suite>.json")
     args = ap.parse_args()
     names = list(SUITES) if args.suite == "all" else [args.suite]
     rows = []
     for name in names:
         t0 = time.time()
-        rows += SUITES[name].run(quick=args.quick)
+        suite_rows = SUITES[name].run(quick=args.quick)
+        rows += suite_rows
+        if args.json:
+            out = write_json(args.json, name, suite_rows)
+            print(f"# wrote {out}", file=sys.stderr)
         print(f"# suite {name} done in {time.time() - t0:.1f}s",
               file=sys.stderr)
     print_csv(rows)

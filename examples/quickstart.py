@@ -46,3 +46,29 @@ hot = sorted(((c, k) for k, c in results["tdorch"].refcount.items()),
              reverse=True)[:5]
 print("\nhottest chunks found by Phase 1 (count, key):",
       [(int(c), int(k)) for c, k in hot])
+
+# --- multi-get + reusable sessions ------------------------------------------
+# Each task may request SEVERAL keys (§2.1): reads are a ragged CSR batch, and
+# a long-lived Orchestrator session reuses one CommForest across stages while
+# accumulating a cross-stage report.
+from repro.core import Orchestrator  # noqa: E402
+
+sess = Orchestrator(store, engine="tdorch")
+for stage in range(3):
+    pairs = zipf_keys(2 * N_TASKS, NUM_KEYS, gamma=2.0, rng=rng).reshape(-1, 2)
+    multi = TaskBatch.from_ragged(
+        contexts=np.zeros((N_TASKS, 1)),
+        key_lists=pairs,  # arity-2 multi-get per task
+        origin=TaskBatch.even_origins(N_TASKS, P),
+    )
+
+    def g(contexts, values, mask):  # values: (n, max_arity, value_width)
+        return {"result": (values[..., 0] * mask).sum(axis=1, keepdims=True)}
+
+    sess.run_stage(multi, g, return_results=True)
+
+print(f"\nsession: {sess.num_stages} multi-get stages, "
+      f"forest planned once (P={P}, F={sess.forest.F})")
+for name, tot in sess.report.phase_totals().items():
+    print(f"  {name:32s} words {tot['total_words']:12.0f}  "
+          f"rounds {tot['rounds']:3d}  work {tot['work']:10.0f}")

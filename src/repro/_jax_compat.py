@@ -1,0 +1,26 @@
+"""Cross-version jax API aliases.
+
+The codebase targets the current jax surface (`jax.shard_map`); older
+releases (≤0.4.x) only ship it under `jax.experimental.shard_map`. Alias it
+forward once, at package import, so every caller can use the modern name.
+(Pallas TPU aliases live in `repro.kernels._compat` — pallas imports are
+heavy and only kernel users should pay for them.)
+"""
+import functools
+
+import jax
+
+if not hasattr(jax, "shard_map"):
+    try:
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        @functools.wraps(_shard_map)
+        def _compat_shard_map(*args, **kwargs):
+            # the replication-check kwarg was renamed check_rep -> check_vma
+            if "check_vma" in kwargs:
+                kwargs["check_rep"] = kwargs.pop("check_vma")
+            return _shard_map(*args, **kwargs)
+
+        jax.shard_map = _compat_shard_map
+    except ImportError:  # pragma: no cover - very old jax
+        pass

@@ -1,21 +1,26 @@
 # The paper's primary contribution: task-data orchestration (Fig. 1) and the
 # TD-Orch engine (§3) — communication forest + meta-task sets + distributed
-# push-pull + merge-able write-backs — plus the §2.3 baselines and the SPMD
+# push-pull + merge-able write-backs — plus the §2.3 baselines, reusable
+# Orchestrator sessions with a pluggable engine registry, and the SPMD
 # (shard_map) production realization used by the LM stack.
 from .comm_forest import CommForest, theory_fanout
-from .cost import CostAccumulator, PhaseCost, StageReport
+from .cost import CostAccumulator, PhaseCost, SessionReport, StageReport
 from .datastore import DataStore, TaskBatch
 from .engine import OrchestrationResult, TDOrchEngine
 from .baselines import DirectPullEngine, DirectPushEngine, SortBasedEngine
-from .interface import ENGINES, make_engine, orchestration
+from .execution import gather_values
+from .interface import ENGINES, make_engine, orchestration, register_engine
 from .mergeops import MERGE_OPS, MergeOp, get_merge_op
+from .session import Orchestrator
 
 __all__ = [
     "CommForest", "theory_fanout",
-    "CostAccumulator", "PhaseCost", "StageReport",
+    "CostAccumulator", "PhaseCost", "SessionReport", "StageReport",
     "DataStore", "TaskBatch",
     "OrchestrationResult", "TDOrchEngine",
     "DirectPullEngine", "DirectPushEngine", "SortBasedEngine",
-    "ENGINES", "make_engine", "orchestration",
+    "gather_values",
+    "ENGINES", "make_engine", "orchestration", "register_engine",
     "MERGE_OPS", "MergeOp", "get_merge_op",
+    "Orchestrator",
 ]

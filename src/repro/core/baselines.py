@@ -1,7 +1,14 @@
 """Baseline orchestration strategies (§2.3): direct-pull, direct-push, and
 the sort-based MPC scheme. All share the vectorized execute/apply path with
-TD-Orch so the four engines produce bit-identical stores — only the cost
-profile (and thus load balance) differs, exactly the comparison in §4/Fig. 5.
+TD-Orch (repro.core.execution) so the four engines produce bit-identical
+stores — only the cost profile (and thus load balance) differs, exactly the
+comparison in §4/Fig. 5.
+
+Ragged multi-get batches: each (task, requested-key) pair is a fetch/ship
+unit. Direct-pull fetches every pair's chunk to the task's origin; direct-push
+ships the task to its *primary* key's home and pulls the remaining chunks
+there; sort-based sorts by primary key and broadcasts every requested chunk
+to the sorted runs. Arity-1 batches follow the exact original cost paths.
 """
 from __future__ import annotations
 
@@ -12,39 +19,20 @@ import numpy as np
 from .cost import CostAccumulator
 from .datastore import DataStore, TaskBatch
 from .engine import OrchestrationResult, _L0_HEADER
+from .execution import apply_writes, execute, update_width
 from .mergeops import MergeOp, get_merge_op
+from .registry import register_engine
 
 
-def _execute(tasks: TaskBatch, store: DataStore, f) -> Dict[str, np.ndarray]:
-    reads = tasks.read_keys >= 0
-    in_vals = np.zeros((tasks.n, store.value_width), dtype=store.values.dtype)
-    if reads.any():
-        in_vals[reads] = store.values[tasks.read_keys[reads]]
-    return f(tasks.contexts, in_vals)
+def _dedup_pairs(machine: np.ndarray, keys: np.ndarray, num_keys: int):
+    """Unique (machine, key) pairs -> (machines, keys)."""
+    pair = machine.astype(np.int64) * np.int64(num_keys + 1) + keys
+    uniq = np.unique(pair)
+    return ((uniq // np.int64(num_keys + 1)).astype(np.int64),
+            (uniq % np.int64(num_keys + 1)).astype(np.int64))
 
 
-def _apply_writes(tasks, store, updates, merge: MergeOp, cost) -> None:
-    if updates is None:
-        return
-    updates = np.atleast_2d(np.asarray(updates))
-    if updates.shape[0] != tasks.n:
-        updates = updates.T
-    writes = tasks.write_keys >= 0
-    if not writes.any():
-        return
-    wk = tasks.write_keys[writes]
-    uniq, seg = np.unique(wk, return_inverse=True)
-    combined = merge.combine_segments(updates[writes], seg, uniq.size,
-                                      tasks.priority[writes])
-    store.values[uniq] = merge.apply(store.values[uniq], combined)
-    cost.work(store.home[uniq], 1.0)
-
-
-def _update_width(updates) -> int:
-    u = np.atleast_2d(np.asarray(updates))
-    return u.shape[1] if u.shape[0] != u.size else 1
-
-
+@register_engine("pull")
 class DirectPullEngine:
     """Dedup per machine, then fetch every needed chunk to the tasks (§2.3
     "Direct Pull" — the RDMA pattern). Hot chunks swamp their home machine
@@ -58,14 +46,11 @@ class DirectPullEngine:
         merge = get_merge_op(write_back)
         cost = CostAccumulator(self.P)
         B = store.chunk_words
-        reads = tasks.read_keys >= 0
 
         cost.begin("pull_fetch")
-        if reads.any():
-            pair = tasks.origin[reads] * np.int64(store.num_keys + 1) + tasks.read_keys[reads]
-            uniq = np.unique(pair)
-            org = (uniq // np.int64(store.num_keys + 1)).astype(np.int64)
-            key = (uniq % np.int64(store.num_keys + 1)).astype(np.int64)
+        if tasks.nnz:
+            org, key = _dedup_pairs(tasks.origin[tasks.pair_task],
+                                    tasks.read_indices, store.num_keys)
             hm = store.home[key]
             cost.send(org, hm, 2)  # request: key + reply address
             cost.work(hm, 1.0)
@@ -74,7 +59,7 @@ class DirectPullEngine:
         cost.end()
 
         cost.begin("pull_execute")
-        out = _execute(tasks, store, f)
+        out = execute(tasks, store, f)
         cost.work(tasks.origin, self.work_per_task)
         cost.end()
         # results already live at the task's origin machine — no return traffic
@@ -87,22 +72,24 @@ class DirectPullEngine:
                 # RDMA semantics: every task issues its own remote write —
                 # no network-side combining, so a hot chunk's home machine
                 # receives one message per writer (the §2.3 skew pathology).
-                w_u = _update_width(updates)
+                w_u = update_width(updates)
                 hm = store.home[tasks.write_keys[writes]]
                 cost.send(tasks.origin[writes], hm, w_u + 1)
                 cost.work(hm, 1.0)
                 cost.tick()
-            _apply_writes(tasks, store, updates, merge, cost)
+            apply_writes(tasks, store, updates, merge, cost)
         cost.end()
 
         return OrchestrationResult(out.get("result"), cost.totals(),
                                    tasks.origin.copy(), {})
 
 
+@register_engine("push")
 class DirectPushEngine:
     """Ship every task context to its chunk's home machine (§2.3 "Direct
     Push" — the RPC pattern). Hot chunks swamp their home with inbound σ-word
-    contexts *and* with the execution work itself."""
+    contexts *and* with the execution work itself. Multi-get tasks go to
+    their primary key's home and pull the remaining chunks there."""
 
     def __init__(self, num_machines: int, work_per_task: float = 1.0):
         self.P = int(num_machines)
@@ -112,19 +99,34 @@ class DirectPushEngine:
         merge = get_merge_op(write_back)
         cost = CostAccumulator(self.P)
         sigma = tasks.ctx_words
-        reads = tasks.read_keys >= 0
+        B = store.chunk_words
+        primary = tasks.primary_read
+        reads = primary >= 0
         exec_site = tasks.origin.copy()
-        exec_site[reads] = store.home[tasks.read_keys[reads]]
+        exec_site[reads] = store.home[primary[reads]]
         wr_only = (~reads) & (tasks.write_keys >= 0)
         exec_site[wr_only] = store.home[tasks.write_keys[wr_only]]
 
         cost.begin("push_offload")
         cost.send(tasks.origin, exec_site, sigma + _L0_HEADER)
         cost.tick()
+        if tasks.max_arity > 1:
+            # secondary chunks fetched to the execution site, deduped per
+            # (site, key) — same RPC round-trip shape as the offload
+            is_primary = np.zeros(tasks.nnz, dtype=bool)
+            is_primary[tasks.read_indptr[:-1][reads]] = True
+            sec = np.flatnonzero(~is_primary)
+            if sec.size:
+                site, key = _dedup_pairs(exec_site[tasks.pair_task[sec]],
+                                         tasks.read_indices[sec], store.num_keys)
+                hm = store.home[key]
+                cost.send(site, hm, 2)
+                cost.send(hm, site, B + 1)
+                cost.tick(2)
         cost.end()
 
         cost.begin("push_execute")
-        out = _execute(tasks, store, f)
+        out = execute(tasks, store, f)
         cost.work(exec_site, self.work_per_task)
         results = out.get("result")
         if return_results and results is not None:
@@ -139,19 +141,18 @@ class DirectPushEngine:
             writes = tasks.write_keys >= 0
             cross = writes & (store.home[np.maximum(tasks.write_keys, 0)] != exec_site)
             if cross.any():
-                w_u = _update_width(updates)
-                pair = exec_site[cross] * np.int64(store.num_keys + 1) + tasks.write_keys[cross]
-                uniq = np.unique(pair)
-                org = (uniq // np.int64(store.num_keys + 1)).astype(np.int64)
-                key = (uniq % np.int64(store.num_keys + 1)).astype(np.int64)
+                w_u = update_width(updates)
+                org, key = _dedup_pairs(exec_site[cross], tasks.write_keys[cross],
+                                        store.num_keys)
                 cost.send(org, store.home[key], w_u + 1)
                 cost.tick()
-            _apply_writes(tasks, store, updates, merge, cost)
+            apply_writes(tasks, store, updates, merge, cost)
         cost.end()
 
         return OrchestrationResult(results, cost.totals(), exec_site, {})
 
 
+@register_engine("sort")
 class SortBasedEngine:
     """Theory-guided MPC scheme (§2.3): sort tasks by chunk address, broadcast
     chunks to the sorted runs, execute, reverse. Asymptotically optimal but
@@ -170,11 +171,12 @@ class SortBasedEngine:
         sigma = tasks.ctx_words
         B = store.chunk_words
         n = tasks.n
+        primary = tasks.primary_read
 
-        # ---- pass 1: global sample-sort of tasks by read key
+        # ---- pass 1: global sample-sort of tasks by (primary) read key
         cost.begin("sort_pass")
         order = np.argsort(
-            np.where(tasks.read_keys >= 0, tasks.read_keys, tasks.write_keys),
+            np.where(primary >= 0, primary, tasks.write_keys),
             kind="stable",
         )
         block = max(1, -(-n // P))
@@ -189,18 +191,15 @@ class SortBasedEngine:
 
         # ---- pass 2: broadcast each chunk to every machine its run spans
         cost.begin("sort_broadcast")
-        reads = tasks.read_keys >= 0
-        if reads.any():
-            pair = sorted_machine[reads] * np.int64(store.num_keys + 1) + tasks.read_keys[reads]
-            uniq = np.unique(pair)
-            mch = (uniq // np.int64(store.num_keys + 1)).astype(np.int64)
-            key = (uniq % np.int64(store.num_keys + 1)).astype(np.int64)
+        if tasks.nnz:
+            mch, key = _dedup_pairs(sorted_machine[tasks.pair_task],
+                                    tasks.read_indices, store.num_keys)
             cost.send(store.home[key], mch, B + 1)
             cost.tick()
         cost.end()
 
         cost.begin("sort_execute")
-        out = _execute(tasks, store, f)
+        out = execute(tasks, store, f)
         cost.work(sorted_machine, self.work_per_task)
         cost.end()
 
@@ -210,13 +209,11 @@ class SortBasedEngine:
         if updates is not None:
             writes = tasks.write_keys >= 0
             if writes.any():
-                w_u = _update_width(updates)
-                pair = sorted_machine[writes] * np.int64(store.num_keys + 1) + tasks.write_keys[writes]
-                uniq = np.unique(pair)
-                mch = (uniq // np.int64(store.num_keys + 1)).astype(np.int64)
-                key = (uniq % np.int64(store.num_keys + 1)).astype(np.int64)
+                w_u = update_width(updates)
+                mch, key = _dedup_pairs(sorted_machine[writes],
+                                        tasks.write_keys[writes], store.num_keys)
                 cost.send(mch, store.home[key], w_u + 1)
-            _apply_writes(tasks, store, updates, merge, cost)
+            apply_writes(tasks, store, updates, merge, cost)
         results = out.get("result")
         if return_results and results is not None:
             w_r = results.shape[1] if results.ndim > 1 else 1

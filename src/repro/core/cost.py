@@ -170,3 +170,100 @@ class StageReport:
             "comm_imbalance": self.imbalance()["comm"],
             "compute_imbalance": self.imbalance()["compute"],
         }
+
+
+@dataclasses.dataclass
+class SessionReport:
+    """Cross-stage cost accumulation for one `Orchestrator` session.
+
+    Stages run sequentially under BSP, so session time is the *sum* of stage
+    times (per Definition 1's denominators each stage is individually
+    max-over-machines). Per-phase totals are summed over stages by phase
+    name, which is what lets a multi-round algorithm (TDO-GP §5) report one
+    words/rounds/work breakdown for the whole run.
+    """
+
+    P: int
+    stages: List[StageReport] = dataclasses.field(default_factory=list)
+
+    def add(self, report: StageReport) -> None:
+        if report.P != self.P:
+            raise ValueError(f"stage ran on P={report.P}, session has P={self.P}")
+        self.stages.append(report)
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.stages)
+
+    def _sum(self, field: str) -> np.ndarray:
+        out = np.zeros(self.P, dtype=np.float64)
+        for st in self.stages:
+            out += getattr(st, field)
+        return out
+
+    @property
+    def sent(self) -> np.ndarray:
+        return self._sum("sent")
+
+    @property
+    def recv(self) -> np.ndarray:
+        return self._sum("recv")
+
+    @property
+    def compute(self) -> np.ndarray:
+        return self._sum("compute")
+
+    @property
+    def comm(self) -> np.ndarray:
+        """Per-machine communication, summed across the session's stages."""
+        return self._sum("comm")
+
+    @property
+    def rounds(self) -> int:
+        return sum(st.rounds for st in self.stages)
+
+    @property
+    def comm_time(self) -> float:
+        return sum(st.comm_time for st in self.stages)
+
+    @property
+    def compute_time(self) -> float:
+        return sum(st.compute_time for st in self.stages)
+
+    def bsp_time(self, g: float = 1.0, t: float = 1.0, L: float = 0.0) -> float:
+        return sum(st.bsp_time(g, t, L) for st in self.stages)
+
+    def phase_totals(self) -> Dict[str, Dict[str, float]]:
+        """Per-phase words/rounds/work summed over all stages, by phase name."""
+        out: Dict[str, Dict[str, float]] = {}
+        for st in self.stages:
+            for ph in st.phases:
+                agg = out.setdefault(ph.name, {
+                    "rounds": 0, "total_words": 0.0, "work": 0.0,
+                    "max_comm": 0.0, "stages": 0,
+                })
+                agg["rounds"] += ph.rounds
+                agg["total_words"] += float(ph.sent.sum())
+                agg["work"] += float(ph.compute.sum())
+                agg["max_comm"] += float(ph.comm.max(initial=0.0))
+                agg["stages"] += 1
+        return out
+
+    def imbalance(self) -> Dict[str, float]:
+        comm, comp = self.comm, self.compute
+        return {
+            "comm": float(comm.max() / max(comm.mean(), 1e-12)),
+            "compute": float(comp.max() / max(comp.mean(), 1e-12)),
+        }
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "P": self.P,
+            "stages": self.num_stages,
+            "rounds": self.rounds,
+            "total_words": float(self.sent.sum()),
+            "comm_time": self.comm_time,
+            "compute_time": self.compute_time,
+            "comm_imbalance": self.imbalance()["comm"],
+            "compute_imbalance": self.imbalance()["compute"],
+        }

@@ -63,34 +63,79 @@ class DataStore:
 
 @dataclasses.dataclass
 class TaskBatch:
-    """A batch of lambda-tasks (Fig. 1), vectorized.
+    """A batch of lambda-tasks (Fig. 1), vectorized — each task requesting
+    *one or more* data items (§2.1).
 
-    Each task: reads chunk `read_keys[i]` (or none, -1), runs the stage's
-    lambda on (context, read value), optionally writes back to
-    `write_keys[i]` (default: same as read key). `origin[i]` is the machine
-    initially holding the task; `ctx_words` = σ. `priority` resolves
-    deterministic-overwrite races (Definition 2 case (iv)).
+    The canonical read layout is a CSR pair (`read_indptr`, `read_indices`):
+    task i requests chunks `read_indices[read_indptr[i]:read_indptr[i+1]]`
+    (possibly zero, possibly with duplicates). `read_keys` — a flat `(n,)`
+    array with -1 meaning "no read" — is kept as a constructor convenience
+    for arity-1 batches and remains available as a flat view whenever
+    `max_arity <= 1` (it is None for genuinely ragged batches).
+
+    Each task runs the stage's lambda on (context, gathered values),
+    optionally writing back to `write_keys[i]` (default: same as the task's
+    first read key). `origin[i]` is the machine initially holding the task;
+    `ctx_words` = σ. `priority` resolves deterministic-overwrite races
+    (Definition 2 case (iv)).
     """
 
     contexts: np.ndarray  # (n, ctx_width)
-    read_keys: np.ndarray  # (n,) int64, -1 = no read
-    origin: np.ndarray  # (n,) int64 machine ids
+    read_keys: np.ndarray | None = None  # (n,) int64, -1 = no read (arity ≤ 1)
+    origin: np.ndarray | None = None  # (n,) int64 machine ids
     write_keys: np.ndarray | None = None  # (n,) int64, -1 = no write
     priority: np.ndarray | None = None  # (n,) tie-break order
     ctx_words: int | None = None  # σ; defaults to ctx width
+    read_indptr: np.ndarray | None = None  # (n+1,) CSR row pointers
+    read_indices: np.ndarray | None = None  # (nnz,) requested chunk keys
 
     def __post_init__(self):
         n = self.contexts.shape[0]
-        self.read_keys = np.asarray(self.read_keys, dtype=np.int64)
+        if self.origin is None:
+            raise ValueError("TaskBatch needs `origin` machine ids")
         self.origin = np.asarray(self.origin, dtype=np.int64)
+
+        if (self.read_indptr is None) != (self.read_indices is None):
+            raise ValueError("read_indptr and read_indices must be given together")
+        if self.read_indptr is not None:
+            if self.read_keys is not None:
+                raise ValueError("pass either read_keys or read_indptr/read_indices")
+            self.read_indptr = np.asarray(self.read_indptr, dtype=np.int64)
+            self.read_indices = np.asarray(self.read_indices, dtype=np.int64)
+            if self.read_indptr.shape[0] != n + 1:
+                raise ValueError(
+                    f"read_indptr length {self.read_indptr.shape[0]} != n+1 {n + 1}")
+            if self.read_indptr[0] != 0 or self.read_indptr[-1] != self.read_indices.shape[0]:
+                raise ValueError("read_indptr must start at 0 and end at nnz")
+            if (np.diff(self.read_indptr) < 0).any():
+                raise ValueError("read_indptr must be non-decreasing")
+            if self.read_indices.size and (self.read_indices < 0).any():
+                raise ValueError("read_indices must be non-negative chunk keys")
+            # flat convenience view exists only for arity-≤1 batches
+            if self.max_arity <= 1:
+                flat = np.full(n, -1, dtype=np.int64)
+                has = np.diff(self.read_indptr) > 0
+                flat[has] = self.read_indices
+                self.read_keys = flat
+        else:
+            if self.read_keys is None:
+                self.read_keys = np.full(n, -1, dtype=np.int64)
+            self.read_keys = np.asarray(self.read_keys, dtype=np.int64)
+            if self.read_keys.shape[0] != n:
+                raise ValueError(f"read_keys length {self.read_keys.shape[0]} != n {n}")
+            has = self.read_keys >= 0
+            self.read_indptr = np.zeros(n + 1, dtype=np.int64)
+            np.cumsum(has, out=self.read_indptr[1:])
+            self.read_indices = self.read_keys[has].copy()
+
         if self.write_keys is None:
-            self.write_keys = self.read_keys.copy()
+            self.write_keys = self.primary_read.copy()
         self.write_keys = np.asarray(self.write_keys, dtype=np.int64)
         if self.priority is None:
             self.priority = np.arange(n, dtype=np.int64)
         if self.ctx_words is None:
             self.ctx_words = int(self.contexts.shape[1]) if self.contexts.ndim > 1 else 1
-        for arr, nm in [(self.read_keys, "read_keys"), (self.origin, "origin"),
+        for arr, nm in [(self.origin, "origin"),
                         (self.write_keys, "write_keys"), (self.priority, "priority")]:
             if arr.shape[0] != n:
                 raise ValueError(f"{nm} length {arr.shape[0]} != n {n}")
@@ -98,6 +143,49 @@ class TaskBatch:
     @property
     def n(self) -> int:
         return self.contexts.shape[0]
+
+    # ---- ragged-read geometry --------------------------------------------
+    @property
+    def arity(self) -> np.ndarray:
+        """(n,) number of chunks each task requests."""
+        return np.diff(self.read_indptr)
+
+    @property
+    def max_arity(self) -> int:
+        return int(self.arity.max(initial=0))
+
+    @property
+    def nnz(self) -> int:
+        """Total number of (task, requested-key) pairs."""
+        return int(self.read_indices.shape[0])
+
+    @property
+    def pair_task(self) -> np.ndarray:
+        """(nnz,) task index of each (task, key) pair, CSR order."""
+        return np.repeat(np.arange(self.n, dtype=np.int64), self.arity)
+
+    @property
+    def primary_read(self) -> np.ndarray:
+        """(n,) each task's first requested key (-1 if it reads nothing).
+
+        The primary key is the one whose tree decides where the task
+        executes and whose reverse meta-task tree same-key write-backs ride;
+        secondary keys are gathered to the execution site.
+        """
+        out = np.full(self.n, -1, dtype=np.int64)
+        has = self.arity > 0
+        out[has] = self.read_indices[self.read_indptr[:-1][has]]
+        return out
+
+    @staticmethod
+    def from_ragged(contexts, key_lists, origin, **kw) -> "TaskBatch":
+        """Build a multi-get batch from per-task key sequences."""
+        indptr = np.zeros(len(key_lists) + 1, dtype=np.int64)
+        np.cumsum([len(k) for k in key_lists], out=indptr[1:])
+        indices = (np.concatenate([np.asarray(k, dtype=np.int64) for k in key_lists])
+                   if indptr[-1] else np.empty(0, dtype=np.int64))
+        return TaskBatch(contexts=contexts, origin=origin,
+                         read_indptr=indptr, read_indices=indices, **kw)
 
     @staticmethod
     def even_origins(n: int, num_machines: int) -> np.ndarray:

@@ -32,7 +32,9 @@ import numpy as np
 from .comm_forest import CommForest
 from .cost import CostAccumulator, StageReport
 from .datastore import DataStore, TaskBatch
+from .execution import apply_writes, call_lambda, gather_values
 from .mergeops import MergeOp, get_merge_op
+from .registry import register_engine
 
 # words charged per message row (header: key + level/count bookkeeping)
 _L0_HEADER = 2  # key + count
@@ -75,8 +77,17 @@ class _Stores:
         return len(self.machine)
 
 
+@register_engine("tdorch")
 class TDOrchEngine:
-    """Paper-faithful TD-Orch over a BSP machine model with cost accounting."""
+    """Paper-faithful TD-Orch over a BSP machine model with cost accounting.
+
+    Multi-get batches: every (task, requested-key) pair climbs the forest as
+    its own meta-task descriptor. The task's *primary* (first) pair carries
+    the σ-word context and decides the execution site; secondary pairs climb
+    as bare requests and their values are forwarded to the execution site
+    after co-location (Phase 2). Arity-1 batches follow the exact original
+    cost path.
+    """
 
     def __init__(
         self,
@@ -110,9 +121,11 @@ class TDOrchEngine:
         C = self.C_override or max(2, int(math.ceil(B / max(sigma, 1))))
 
         cost = CostAccumulator(P)
-        n = tasks.n
-        reads = tasks.read_keys >= 0
-        exec_site = tasks.origin.copy()  # tasks with no read execute in place
+        arity = tasks.arity
+        has_read = arity > 0
+        # each (task, key) pair gets a co-location site; tasks with no read
+        # execute in place, the rest where their primary pair lands
+        pair_site = tasks.origin[tasks.pair_task]
 
         stores = _Stores()
         root_rows_key: np.ndarray = np.empty(0, dtype=np.int64)
@@ -120,23 +133,24 @@ class TDOrchEngine:
 
         # ---------------- Phase 1: contention detection --------------------
         cost.begin("phase1_contention_detection")
-        if reads.any():
-            exec_site, root_rows_key, root_rows_cnt = self._phase1(
-                tasks, store, cost, stores, exec_site, sigma, C
+        if tasks.nnz:
+            pair_site, root_rows_key, root_rows_cnt = self._phase1(
+                tasks, store, cost, stores, pair_site, sigma, C
             )
         cost.end()
+        exec_site = tasks.origin.copy()
+        exec_site[has_read] = pair_site[tasks.read_indptr[:-1][has_read]]
 
         # ---------------- Phase 2: push-pull co-location -------------------
         cost.begin("phase2_push_pull")
         self._phase2_pull(store, cost, stores, B)
+        self._phase2_secondary(tasks, store, cost, pair_site, exec_site)
         cost.end()
 
         # ---------------- Phase 3: execution -------------------------------
         cost.begin("phase3_execute")
-        in_vals = np.zeros((n, store.value_width), dtype=store.values.dtype)
-        if reads.any():
-            in_vals[reads] = store.values[tasks.read_keys[reads]]
-        out = f(tasks.contexts, in_vals)
+        in_vals, in_mask = gather_values(tasks, store)
+        out = call_lambda(f, tasks.contexts, in_vals, in_mask)
         updates = out.get("update")
         results = out.get("result")
         cost.work(exec_site, self.work_per_task)
@@ -163,47 +177,58 @@ class TDOrchEngine:
         )
 
     # ------------------------------------------------------------------
-    def _phase1(self, tasks, store, cost, stores, exec_site, sigma, C):
+    def _phase1(self, tasks, store, cost, stores, pair_site, sigma, C):
         """Climb the communication forest, merging meta-task sets (§3.1–3.2).
 
         Merging happens at the *leaf* machines first — a machine's own >C
         duplicate requests collapse to one aggregated meta-task before any
         message is sent (this is what makes the "trivial" F = Θ(n/P) regime
         of Theorem 1's proof work) — then again at every transit VM.
+
+        Each (task, requested-key) pair is its own descriptor. Primary pairs
+        carry the task context (σ + header words); secondary pairs of a
+        multi-get task are bare requests (header only).
         """
         forest = self.forest
-        sel = np.flatnonzero(tasks.read_keys >= 0)
+        keys = tasks.read_indices
+        origin = tasks.origin[tasks.pair_task]
+        nnz = keys.shape[0]
+        is_primary = np.zeros(nnz, dtype=bool)
+        has = tasks.arity > 0
+        is_primary[tasks.read_indptr[:-1][has]] = True
         tbl = {
-            "key": tasks.read_keys[sel],
-            "hm": store.home[tasks.read_keys[sel]],  # tree root machine
-            "node": forest.leaf_node(tasks.origin[sel]),
-            "pm": tasks.origin[sel].copy(),
-            "lvl": np.zeros(sel.size, dtype=np.int64),
-            "cnt": np.ones(sel.size, dtype=np.int64),
-            # L0 payload = task index; L>=1 payload = store id
-            "pay": sel.copy(),
+            "key": keys.copy(),
+            "hm": store.home[keys],  # tree root machine
+            "node": forest.leaf_node(origin),
+            "pm": origin.copy(),
+            "lvl": np.zeros(nnz, dtype=np.int64),
+            "cnt": np.ones(nnz, dtype=np.int64),
+            # L0 payload = pair index; L>=1 payload = store id
+            "pay": np.arange(nnz, dtype=np.int64),
+            # words an L0 row costs to move (context rides the primary pair)
+            "w0": np.where(is_primary, sigma + _L0_HEADER, _L0_HEADER),
         }
 
         # merge at leaves (round 0: no movement, purely local aggregation)
-        tbl = self._merge_pass(tbl, stores, exec_site, cost, C)
+        tbl = self._merge_pass(tbl, stores, pair_site, cost, C)
 
         for _round in range(forest.height):
             # ---- move every live meta-task to its parent transit VM
             parent_node = forest.parent(tbl["node"])
             new_pm = forest.physical(tbl["hm"], parent_node)
-            words = np.where(tbl["lvl"] == 0, sigma + _L0_HEADER, _META_WORDS)
+            words = np.where(tbl["lvl"] == 0, tbl["w0"], _META_WORDS)
             cost.send(tbl["pm"], new_pm, words)
             cost.tick()
             tbl["node"], tbl["pm"] = parent_node, new_pm
             # ---- merge per (key, node); skip the root — the chunk lives
             # there, so arriving L0 contexts are final (push complete, §3.3)
             if (tbl["node"] != 0).any():
-                tbl = self._merge_pass(tbl, stores, exec_site, cost, C)
+                tbl = self._merge_pass(tbl, stores, pair_site, cost, C)
 
-        # all rows now at roots: L0 rows execute at the chunk's home machine
+        # all rows now at roots: L0 pairs co-locate at the chunk's home
         key, lvl, cnt, pay, pm = (tbl[k] for k in ("key", "lvl", "cnt", "pay", "pm"))
         l0 = lvl == 0
-        exec_site[pay[l0]] = pm[l0]
+        pair_site[pay[l0]] = pm[l0]
         for p in pay[~l0]:
             stores.parent[int(p)] = -2  # reached root
         # per-key observed refcount at root
@@ -213,10 +238,10 @@ class TDOrchEngine:
         else:
             uk = np.empty(0, dtype=np.int64)
             rc = np.empty(0, dtype=np.int64)
-        return exec_site, uk, rc
+        return pair_site, uk, rc
 
     # ------------------------------------------------------------------
-    def _merge_pass(self, tbl, stores, exec_site, cost, C):
+    def _merge_pass(self, tbl, stores, pair_site, cost, C):
         """Merge meta-task sets per (key, node): >C same-level meta-tasks are
         parked at the hosting machine and replaced by one L_{ℓ+1} aggregate;
         the cascade may overflow upward (§3.2, Fig. 4)."""
@@ -258,9 +283,9 @@ class TDOrchEngine:
                 g_pm = int(tbl["pm"][members[0]])
                 g_key = int(tbl["key"][members[0]])
                 sid = stores.add(g_pm, g_key, level, members.size)
-                # park: L0 members execute here; store members get parent
+                # park: L0 members co-locate here; store members get parent
                 if level == 0:
-                    exec_site[tbl["pay"][members]] = g_pm
+                    pair_site[tbl["pay"][members]] = g_pm
                 else:
                     for p in tbl["pay"][members]:
                         stores.parent[int(p)] = sid
@@ -273,6 +298,7 @@ class TDOrchEngine:
                 emit["cnt"].append(int(tbl["cnt"][members].sum()))
                 emit["pay"].append(sid)
                 emit["gid"].append(int(tbl["gid"][members[0]]))
+                emit["w0"].append(_META_WORDS)  # unused: aggregates are L≥1
             keep = np.ones(tbl["key"].size, dtype=bool)
             keep[park] = False
             for k in tbl:
@@ -298,6 +324,29 @@ class TDOrchEngine:
         cost.work(machine, 1.0)
 
     # ------------------------------------------------------------------
+    def _phase2_secondary(self, tasks, store, cost, pair_site, exec_site):
+        """Forward secondary-pair values to their task's execution site.
+
+        A multi-get task executes where its primary pair landed; each of its
+        other requested values — now resident at the pair's co-location site
+        (a parked transit machine with a chunk copy, or the chunk's home) —
+        is forwarded there as a (key, value) row. Arity-1 batches have no
+        secondary pairs, so this is free and round-less for them.
+        """
+        if tasks.max_arity <= 1:
+            return
+        is_primary = np.zeros(tasks.nnz, dtype=bool)
+        has = tasks.arity > 0
+        is_primary[tasks.read_indptr[:-1][has]] = True
+        sec = np.flatnonzero(~is_primary)
+        if sec.size == 0:
+            return
+        dst = exec_site[tasks.pair_task[sec]]
+        cost.send(pair_site[sec], dst, store.value_width + 1)
+        cost.work(pair_site[sec], 1.0)
+        cost.tick()
+
+    # ------------------------------------------------------------------
     def _phase4(self, tasks, store, cost, stores, exec_site, updates, merge):
         """Merge-able write-backs (§3.4). In-tree writes climb the reverse
         meta-task tree; cross-key writes ride the destination forest."""
@@ -309,7 +358,9 @@ class TDOrchEngine:
         if not writes.any():
             return
 
-        in_tree = writes & (tasks.write_keys == tasks.read_keys)
+        # writes to the task's primary key climb its reverse meta-task tree;
+        # everything else (cross-key, secondary-key) rides the dest forest
+        in_tree = writes & (tasks.write_keys == tasks.primary_read)
         cross = writes & ~in_tree
 
         # --- reverse meta-task tree: one ⊗-combined message per store edge
@@ -331,14 +382,8 @@ class TDOrchEngine:
                 tasks.write_keys[cross], exec_site[cross], store, cost, w_u
             )
 
-        # --- numeric application (single authoritative ⊙ per chunk)
-        wk = tasks.write_keys[writes]
-        uniq, seg = np.unique(wk, return_inverse=True)
-        combined = merge.combine_segments(
-            updates[writes], seg, uniq.size, tasks.priority[writes]
-        )
-        store.values[uniq] = merge.apply(store.values[uniq], combined)
-        cost.work(store.home[uniq], 1.0)  # ⊙ application at the home machines
+        # --- numeric application (single authoritative ⊙ per chunk, shared)
+        apply_writes(tasks, store, updates, merge, cost)
 
     # ------------------------------------------------------------------
     def _forest_scatter_reduce(self, wkeys, site, store, cost, w_u):

@@ -2,12 +2,19 @@
 
     orchestration(tasks, f, store, write_back=...) -> OrchestrationResult
 
-`tasks` is a vectorized `TaskBatch` (InputPointers = read_keys, OutputPointers
-= write_keys, LocalContexts = contexts); `f` is the batched lambda
-(contexts, in_values) -> {"update": ..., "result": ...}; `write_back` names a
-merge-able ⊕ (Definition 2). The `engine` kwarg selects the scheduling
-strategy — "tdorch" (ours) or a §2.3 baseline — without touching user code,
-which is the point of the abstraction.
+`tasks` is a vectorized `TaskBatch` (InputPointers = read_indptr/read_indices
+CSR — or the flat `read_keys` convenience for arity-1 batches; OutputPointers
+= write_keys; LocalContexts = contexts); `f` is the batched lambda
+(contexts, in_values[, mask]) -> {"update": ..., "result": ...}; `write_back`
+names a merge-able ⊕ (Definition 2). The `engine` kwarg selects the
+scheduling strategy — "tdorch" (ours) or a §2.3 baseline, via the
+`@register_engine` registry — without touching user code, which is the point
+of the abstraction.
+
+`orchestration()` is the one-shot shim: it builds a throwaway `Orchestrator`
+session per call. Workloads that chain stages (graph rounds, kv batches)
+should construct an `Orchestrator` once and call `run_stage` so the
+`CommForest` is built a single time and costs accumulate per session.
 """
 from __future__ import annotations
 
@@ -15,24 +22,16 @@ from typing import Callable, Dict
 
 import numpy as np
 
-from .baselines import DirectPullEngine, DirectPushEngine, SortBasedEngine
+# importing the engine modules populates the registry
+from . import baselines as _baselines  # noqa: F401
+from . import engine as _engine  # noqa: F401
 from .datastore import DataStore, TaskBatch
-from .engine import OrchestrationResult, TDOrchEngine
+from .engine import OrchestrationResult
+from .registry import ENGINES, make_engine, register_engine
+from .session import Orchestrator
 
-ENGINES = {
-    "tdorch": TDOrchEngine,
-    "push": DirectPushEngine,
-    "pull": DirectPullEngine,
-    "sort": SortBasedEngine,
-}
-
-
-def make_engine(name: str, num_machines: int, **opts):
-    try:
-        cls = ENGINES[name]
-    except KeyError:
-        raise KeyError(f"unknown engine {name!r}; available: {sorted(ENGINES)}") from None
-    return cls(num_machines, **opts)
+__all__ = ["ENGINES", "make_engine", "register_engine", "orchestration",
+           "Orchestrator"]
 
 
 def orchestration(
@@ -45,6 +44,6 @@ def orchestration(
     return_results: bool = False,
     **engine_opts,
 ) -> OrchestrationResult:
-    eng = make_engine(engine, store.P, **engine_opts)
-    return eng.run_stage(tasks, store, f, write_back=write_back,
-                         return_results=return_results)
+    sess = Orchestrator(store, engine=engine, **engine_opts)
+    return sess.run_stage(tasks, f, write_back=write_back,
+                          return_results=return_results)

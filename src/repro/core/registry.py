@@ -1,0 +1,38 @@
+"""Engine registry: the pluggable scheduling strategies behind the
+orchestration interface.
+
+Engines self-register with `@register_engine("name")`, so adding a strategy
+is one decorator away — no central table to edit. An engine class takes
+`(num_machines, **opts)` and exposes
+`run_stage(tasks, store, f, write_back=..., return_results=...)`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Type
+
+ENGINES: Dict[str, type] = {}
+
+
+def register_engine(name: str) -> Callable[[type], type]:
+    """Class decorator registering an orchestration engine under `name`."""
+
+    def deco(cls: type) -> type:
+        if name in ENGINES and ENGINES[name] is not cls:
+            raise ValueError(f"engine {name!r} already registered "
+                             f"({ENGINES[name].__name__})")
+        ENGINES[name] = cls
+        return cls
+
+    return deco
+
+
+def get_engine_cls(name: str) -> Type:
+    try:
+        return ENGINES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown engine {name!r}; available: {sorted(ENGINES)}") from None
+
+
+def make_engine(name: str, num_machines: int, **opts):
+    return get_engine_cls(name)(num_machines, **opts)

@@ -1,0 +1,80 @@
+"""Reusable orchestration sessions — the single front door for every workload.
+
+An `Orchestrator` is constructed once per `(store, engine, opts)` and reused
+across stages: the engine instance (and with it the `CommForest`, which only
+depends on P and the fanout) is built exactly once, `run_stage` chains
+stages against the same store, and a cross-stage `SessionReport` accumulates
+per-phase words/rounds/work over the whole run. This is what lets TDO-GP-style
+algorithms (§5) run dozens of rounds without re-planning the topology, and
+what makes the repro usable as a platform rather than a one-shot solver.
+
+    sess = Orchestrator(store, engine="tdorch")
+    r1 = sess.run_stage(tasks_a, f)               # write_back="add"
+    r2 = sess.run_stage(tasks_b, g, write_back="min")
+    sess.report.phase_totals()                    # summed across both stages
+
+`orchestration(...)` in `interface.py` remains as a thin one-shot shim over a
+throwaway session.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from .cost import SessionReport
+from .datastore import DataStore, TaskBatch
+from .engine import OrchestrationResult
+from .mergeops import MergeOp
+from .registry import make_engine
+
+
+class Orchestrator:
+    """A long-lived scheduling session over one store and one engine."""
+
+    def __init__(self, store: DataStore, engine: str = "tdorch", **engine_opts):
+        self.store = store
+        self.engine_name = engine if isinstance(engine, str) else type(engine).__name__
+        self.engine = (make_engine(engine, store.P, **engine_opts)
+                       if isinstance(engine, str) else engine)
+        self._report = SessionReport(store.P)
+
+    # ------------------------------------------------------------------
+    @property
+    def P(self) -> int:
+        return self.store.P
+
+    @property
+    def forest(self):
+        """The session's cached CommForest (None for forest-free engines)."""
+        return getattr(self.engine, "forest", None)
+
+    @property
+    def report(self) -> SessionReport:
+        """Cross-stage cost accumulation (per-phase words/rounds/work)."""
+        return self._report
+
+    @property
+    def num_stages(self) -> int:
+        return self._report.num_stages
+
+    # ------------------------------------------------------------------
+    def run_stage(
+        self,
+        tasks: TaskBatch,
+        f: Callable[..., Dict[str, Optional[np.ndarray]]],
+        write_back: str | MergeOp = "add",
+        *,
+        return_results: bool = False,
+    ) -> OrchestrationResult:
+        """Run one orchestration stage against the session's store and fold
+        its cost report into the session report."""
+        res = self.engine.run_stage(tasks, self.store, f, write_back=write_back,
+                                    return_results=return_results)
+        self._report.add(res.report)
+        return res
+
+    def reset_report(self) -> SessionReport:
+        """Detach and return the accumulated report, starting a fresh one."""
+        out, self._report = self._report, SessionReport(self.store.P)
+        return out

@@ -11,12 +11,14 @@ from .generators import (
 )
 from .partition import OrchestratedGraph, ingest
 from .vertex_subset import DistVertexSubset
+from .session import GraphSession, TreeCharger
 from .distedgemap import dist_edge_map, EdgeMapStats
-from .algorithms import bfs, bc, cc, pagerank, sssp
+from .algorithms import RunInfo, bfs, bc, cc, pagerank, sssp
 
 __all__ = [
     "Graph", "barabasi_albert", "erdos_renyi", "grid_2d", "star_graph",
     "OrchestratedGraph", "ingest",
     "DistVertexSubset", "dist_edge_map", "EdgeMapStats",
-    "bfs", "bc", "cc", "pagerank", "sssp",
+    "GraphSession", "TreeCharger",
+    "RunInfo", "bfs", "bc", "cc", "pagerank", "sssp",
 ]

@@ -12,12 +12,14 @@ EdgeMapStats so benchmarks can report comm/compute/overhead breakdowns
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
-from .distedgemap import EdgeMapStats, dist_edge_map
+from ..core.cost import SessionReport
+from .distedgemap import EdgeMapStats
 from .partition import OrchestratedGraph
+from .session import GraphSession
 from .vertex_subset import DistVertexSubset
 
 
@@ -25,6 +27,9 @@ from .vertex_subset import DistVertexSubset
 class RunInfo:
     rounds: int
     stats: List[EdgeMapStats]
+    # the run's session report: per-phase words/rounds/work summed across all
+    # DistEdgeMap rounds (one GraphSession per algorithm invocation)
+    report: Optional[SessionReport] = None
 
     @property
     def total_edges_processed(self) -> int:
@@ -40,10 +45,23 @@ class RunInfo:
         return sum(s.report.rounds for s in self.stats if s.report)
 
 
-def _opts(kw):
-    keys = ("account", "dedup", "fast_local", "force_mode", "threshold_frac",
-            "per_edge_comm")
-    return {k: kw[k] for k in keys if k in kw}
+_EDGE_OPTS = ("account", "dedup", "fast_local", "force_mode", "threshold_frac",
+              "per_edge_comm")
+
+
+def _session(og, kw):
+    """One GraphSession per algorithm run (or the caller's, via session=...);
+    every round is driven through it so the tree machinery is built once and
+    costs accumulate across rounds.
+
+    Returns (session, per_call_opts): a fresh session absorbs the caller's
+    edge-map options as its defaults; a caller-provided session keeps its own
+    defaults and the options ride along per call instead."""
+    opts = {k: kw[k] for k in _EDGE_OPTS if k in kw}
+    sess = kw.pop("session", None)
+    if sess is not None:
+        return sess, opts
+    return GraphSession(og, opts), {}
 
 
 # ---------------------------------------------------------------------------
@@ -51,6 +69,7 @@ def bfs(og: OrchestratedGraph, source: int, **kw):
     """Algorithm 2: frontier BFS; merge = max (any writer wins — idempotent
     since every writer this round carries the same ROUND value)."""
     n = og.n
+    sess, em_opts = _session(og, kw)
     dist = np.full(n, -1, dtype=np.int64)
     dist[source] = 0
     frontier = DistVertexSubset.single(n, source)
@@ -67,11 +86,11 @@ def bfs(og: OrchestratedGraph, source: int, **kw):
             dist[vs[fresh]] = agg[fresh].astype(np.int64)
             return fresh
 
-        frontier, st = dist_edge_map(
-            og, frontier, f, wb, "max",
-            filter_dst=lambda d: dist[d] == -1, **_opts(kw))
+        frontier, st = sess.edge_map(
+            frontier, f, wb, "max", filter_dst=lambda d: dist[d] == -1,
+            **em_opts)
         stats.append(st)
-    return dist, RunInfo(rnd, stats)
+    return dist, RunInfo(rnd, stats, sess.report)
 
 
 # ---------------------------------------------------------------------------
@@ -80,6 +99,7 @@ def sssp(og: OrchestratedGraph, source: int, **kw):
     n = og.n
     if og.graph.weights is None:
         raise ValueError("sssp needs weights; call Graph.with_weights()")
+    sess, em_opts = _session(og, kw)
     dist = np.full(n, np.inf)
     dist[source] = 0.0
     frontier = DistVertexSubset.single(n, source)
@@ -96,17 +116,18 @@ def sssp(og: OrchestratedGraph, source: int, **kw):
             dist[vs[better]] = agg[better]
             return better
 
-        frontier, st = dist_edge_map(og, frontier, f, wb, "min", **_opts(kw))
+        frontier, st = sess.edge_map(frontier, f, wb, "min", **em_opts)
         stats.append(st)
         if rnd > og.n + 1:  # negative-cycle guard (shouldn't trigger)
             raise RuntimeError("SSSP failed to converge")
-    return dist, RunInfo(rnd, stats)
+    return dist, RunInfo(rnd, stats, sess.report)
 
 
 # ---------------------------------------------------------------------------
 def cc(og: OrchestratedGraph, **kw):
     """Connected components by min-label propagation; merge = min."""
     n = og.n
+    sess, em_opts = _session(og, kw)
     labels = np.arange(n, dtype=np.float64)
     frontier = DistVertexSubset.full(n)
     stats: List[EdgeMapStats] = []
@@ -122,9 +143,9 @@ def cc(og: OrchestratedGraph, **kw):
             labels[vs[better]] = agg[better]
             return better
 
-        frontier, st = dist_edge_map(og, frontier, f, wb, "min", **_opts(kw))
+        frontier, st = sess.edge_map(frontier, f, wb, "min", **em_opts)
         stats.append(st)
-    return labels.astype(np.int64), RunInfo(rnd, stats)
+    return labels.astype(np.int64), RunInfo(rnd, stats, sess.report)
 
 
 # ---------------------------------------------------------------------------
@@ -133,6 +154,8 @@ def pagerank(og: OrchestratedGraph, alpha: float = 0.85, tol: float = 1e-8,
     """Power iteration; merge = add. Dangling mass redistributed uniformly
     (networkx convention, so oracles agree exactly)."""
     n = og.n
+    force_mode = kw.pop("force_mode", "dense")
+    sess, em_opts = _session(og, kw)
     deg = og.out_degree().astype(np.float64)
     pr = np.full(n, 1.0 / n)
     dangling = deg == 0
@@ -150,14 +173,14 @@ def pagerank(og: OrchestratedGraph, alpha: float = 0.85, tol: float = 1e-8,
             nxt[vs] += alpha * agg
             return np.ones(vs.size, dtype=bool)
 
-        _, st = dist_edge_map(og, frontier, f, wb, "add",
-                              force_mode=kw.pop("force_mode", "dense"), **_opts(kw))
+        _, st = sess.edge_map(frontier, f, wb, "add", force_mode=force_mode,
+                              **em_opts)
         stats.append(st)
         delta = np.abs(nxt - pr).sum()
         pr = nxt
         if delta < tol * n:
             break
-    return pr, RunInfo(it, stats)
+    return pr, RunInfo(it, stats, sess.report)
 
 
 # ---------------------------------------------------------------------------
@@ -166,6 +189,7 @@ def bc(og: OrchestratedGraph, source: int, **kw):
     level-synchronous σ accumulation, then backward dependency propagation
     using the 1/σ trick (lines 27–34): δ_v = σ_v·φ_v − 1."""
     n = og.n
+    sess, em_opts = _session(og, kw)
     num_paths = np.zeros(n)
     rounds_arr = np.zeros(n, dtype=np.int64)
     num_paths[source] = 1.0
@@ -187,9 +211,9 @@ def bc(og: OrchestratedGraph, source: int, **kw):
             rounds_arr[vs[fresh]] = _r
             return fresh
 
-        frontier, st = dist_edge_map(
-            og, frontier, f, wb, "add",
-            filter_dst=lambda d: rounds_arr[d] == 0, **_opts(kw))
+        frontier, st = sess.edge_map(
+            frontier, f, wb, "add", filter_dst=lambda d: rounds_arr[d] == 0,
+            **em_opts)
         stats.append(st)
         if not frontier.is_empty:
             frontiers[rnd] = frontier
@@ -209,12 +233,12 @@ def bc(og: OrchestratedGraph, source: int, **kw):
             phi[vs[sel]] += agg[sel]
             return sel
 
-        _, st = dist_edge_map(
-            og, fr, f, wb, "add",
-            filter_dst=lambda d, _r=r: rounds_arr[d] == _r - 1, **_opts(kw))
+        _, st = sess.edge_map(
+            fr, f, wb, "add", filter_dst=lambda d, _r=r: rounds_arr[d] == _r - 1,
+            **em_opts)
         stats.append(st)
     # ---- line 34: δ_v = σ_v·φ_v − 1 on visited vertices (0 elsewhere)
     delta = np.zeros(n)
     delta[visited] = phi[visited] * num_paths[visited] - 1.0
     delta[source] = 0.0
-    return delta, RunInfo(rnd + last - 1, stats)
+    return delta, RunInfo(rnd + last - 1, stats, sess.report)

@@ -15,6 +15,11 @@ is accounted against the ingestion-time source/destination trees:
   directly to exactly the machines storing its out-edges.
 Write-backs are ⊗-combined per (machine, destination), then climb the
 destination tree to the vertex home (§5.1 "destination trees").
+
+The source-tree machinery (per-member parent maps over the C-ary trees) is
+session state: rounds driven through a `GraphSession` reuse the session's
+precomputed `TreeCharger`; direct calls borrow the graph's cached default
+session instead of rebuilding the layout per call.
 """
 from __future__ import annotations
 
@@ -26,9 +31,8 @@ import numpy as np
 from ..core.cost import CostAccumulator, StageReport
 from ..core.mergeops import get_merge_op
 from .partition import OrchestratedGraph
+from .session import VALUE_WORDS, TreeCharger, _expand_csr, session_for
 from .vertex_subset import DistVertexSubset
-
-VALUE_WORDS = 2  # one vertex value + vertex id per message
 
 
 @dataclasses.dataclass
@@ -39,51 +43,6 @@ class EdgeMapStats:
     report: Optional[StageReport] = None
 
 
-def _expand_csr(indptr: np.ndarray, select: np.ndarray):
-    """Flatten CSR slices for `select` rows -> (flat positions, counts)."""
-    counts = indptr[select + 1] - indptr[select]
-    total = int(counts.sum())
-    if total == 0:
-        return np.empty(0, dtype=np.int64), counts
-    starts = indptr[select]
-    # position r within each slice via the classic repeat/arange trick
-    offs = np.repeat(np.cumsum(counts) - counts, counts)
-    r = np.arange(total, dtype=np.int64) - offs
-    return np.repeat(starts, counts) + r, counts
-
-
-def _charge_tree(
-    cost: CostAccumulator,
-    roots: np.ndarray,  # root machine per group (vertex home)
-    indptr: np.ndarray,
-    machines: np.ndarray,
-    select: np.ndarray,  # group (vertex) ids
-    C: int,
-    words: float,
-    upward: bool,
-) -> int:
-    """Charge one sweep of the C-ary trees over each group's machine list —
-    downward = value broadcast (source tree), upward = write-back combine
-    (destination tree). Returns the max tree height (BSP rounds)."""
-    flat, counts = _expand_csr(indptr, select)
-    if flat.size == 0:
-        return 0
-    offs = np.repeat(np.cumsum(counts) - counts, counts)
-    r = np.arange(flat.size, dtype=np.int64) - offs  # rank within group
-    child = machines[flat]
-    root_rep = np.repeat(roots, counts)
-    parent_seq = r // C  # heap layout over [root, m0, m1, ...]
-    starts = np.repeat(indptr[select], counts)
-    parent = np.where(parent_seq == 0, root_rep, machines[starts + parent_seq - 1])
-    if upward:
-        cost.send(child, parent, words)
-    else:
-        cost.send(parent, child, words)
-    kmax = int(counts.max(initial=0))
-    height = int(np.ceil(np.log(kmax + 1) / np.log(max(C, 2)))) + 1 if kmax else 0
-    return height
-
-
 def dist_edge_map(
     og: OrchestratedGraph,
     U: DistVertexSubset,
@@ -92,6 +51,7 @@ def dist_edge_map(
     merge_value: str = "min",
     filter_dst: Optional[Callable[[np.ndarray], np.ndarray]] = None,
     *,
+    session=None,  # GraphSession providing the tree machinery
     account: bool = True,
     force_mode: Optional[str] = None,
     dedup: bool = True,  # T1: dedup + destination-aware broadcast
@@ -101,6 +61,7 @@ def dist_edge_map(
 ) -> tuple[DistVertexSubset, EdgeMapStats]:
     g = og.graph
     merge = get_merge_op(merge_value)
+    sess = session if session is not None else session_for(og)
     idx = U.indices
     sum_deg = U.sum_degrees(og.out_indptr)
 
@@ -141,17 +102,13 @@ def dist_edge_map(
         cost.tick(2)
     elif cost is not None and idx.size:
         if mode == "sparse":
-            h = _charge_tree(cost, og.vertex_home[idx], og.src_grp_indptr,
-                             og.src_grp_machines, idx, og.C, VALUE_WORDS,
-                             upward=False)
+            h = sess.src_charger.charge(cost, idx, VALUE_WORDS, upward=False)
             cost.tick(max(h, 1))
         else:
             if dedup:
                 # T1 destination-aware broadcast: value -> only machines
                 # holding that vertex's out-edges, one copy each
-                flatg, countsg = _expand_csr(og.src_grp_indptr, idx)
-                cost.send(np.repeat(og.vertex_home[idx], countsg),
-                          og.src_grp_machines[flatg], VALUE_WORDS)
+                sess.src_charger.direct_broadcast(cost, idx, VALUE_WORDS)
             else:
                 # naive dense: broadcast every active value to all machines
                 allm = np.arange(og.P, dtype=np.int64)
@@ -183,12 +140,14 @@ def dist_edge_map(
         um = (upair % og.P).astype(np.int64)
         if dedup:
             # group by vertex: CSR over (uv, um), tree-combine to vertex home
+            # (per-round charger: the touched (vertex, machine) set depends
+            # on this round's active edges)
             indptr = np.zeros(og.n + 1, dtype=np.int64)
             np.add.at(indptr, uv + 1, 1)
             np.cumsum(indptr, out=indptr)
             vset = np.unique(uv)
-            h = _charge_tree(cost, og.vertex_home[vset], indptr, um, vset,
-                             og.C, VALUE_WORDS, upward=True)
+            dst_charger = TreeCharger(og.vertex_home, indptr, um, og.C)
+            h = dst_charger.charge(cost, vset, VALUE_WORDS, upward=True)
             cost.tick(max(h, 1))
         else:
             # no en-route combining: every machine writes straight to home

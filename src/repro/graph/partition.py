@@ -26,7 +26,7 @@ import numpy as np
 
 from ..core.cost import StageReport
 from ..core.datastore import DataStore, TaskBatch
-from ..core.engine import TDOrchEngine
+from ..core.session import Orchestrator
 from .generators import Graph
 
 
@@ -161,8 +161,8 @@ def ingest(
         read_keys=graph.src,
         origin=rng.integers(0, P, size=m),  # random initial edge placement
     )
-    engine = TDOrchEngine(P, C=C, fanout=fanout, sigma=2)
-    res = engine.run_stage(tasks, vertex_store, lambda c, v: {}, write_back="add")
+    sess = Orchestrator(vertex_store, engine="tdorch", C=C, fanout=fanout, sigma=2)
+    res = sess.run_stage(tasks, lambda c, v: {}, write_back="add")
     edge_machine = res.exec_site.copy()
 
     # ---- Stage 2: destination trees over the frozen placement ------------

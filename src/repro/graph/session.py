@@ -1,0 +1,159 @@
+"""Per-graph orchestration sessions for TDO-GP (§5).
+
+Graph algorithms run dozens of DistEdgeMap rounds against the SAME
+ingestion-time topology, so the tree machinery is session state, not
+per-call state:
+
+  * `TreeCharger` precomputes — once — the parent machine of every member of
+    every C-ary source tree (the heap layout over [root, m0, m1, ...] that
+    `dist_edge_map` previously re-derived from the CSR on every round).
+  * `GraphSession` owns the chargers for one `OrchestratedGraph` and folds
+    every round's `StageReport` into one cross-round `SessionReport`
+    (per-phase words/rounds/work summed), mirroring
+    `core.session.Orchestrator` for the kv/orchestration side.
+
+Algorithms construct one session per run (`GraphSession(og, **opts)`) and
+call `session.edge_map(...)` per round; calling `dist_edge_map` directly
+still works — it borrows the graph's cached default session for the tree
+machinery without recording into it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+from ..core.cost import CostAccumulator, SessionReport
+
+VALUE_WORDS = 2  # one vertex value + vertex id per message
+
+
+def _expand_csr(indptr: np.ndarray, select: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Flatten CSR slices for `select` rows -> (flat positions, counts)."""
+    counts = indptr[select + 1] - indptr[select]
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64), counts
+    starts = indptr[select]
+    # position r within each slice via the classic repeat/arange trick
+    offs = np.repeat(np.cumsum(counts) - counts, counts)
+    r = np.arange(total, dtype=np.int64) - offs
+    return np.repeat(starts, counts) + r, counts
+
+
+class TreeCharger:
+    """Cost-charging machinery for one family of C-ary trees (§5.1).
+
+    Each group (vertex) owns a tree whose root is the vertex's home machine
+    and whose nodes are the sorted machine list storing the group's edges in
+    heap layout [root, m0, m1, ...]. The parent machine of every member is
+    precomputed once per session; per-round charging is then a flat gather.
+    """
+
+    def __init__(self, roots: np.ndarray, indptr: np.ndarray,
+                 machines: np.ndarray, C: int):
+        self.roots = np.asarray(roots, dtype=np.int64)
+        self.indptr = np.asarray(indptr, dtype=np.int64)
+        self.machines = np.asarray(machines, dtype=np.int64)
+        self.C = int(C)
+        counts = np.diff(self.indptr)
+        grp = np.repeat(np.arange(counts.size, dtype=np.int64), counts)
+        starts = np.repeat(self.indptr[:-1], counts)
+        rank = np.arange(self.machines.size, dtype=np.int64) - starts
+        parent_seq = rank // self.C
+        self.parents = np.where(parent_seq == 0, self.roots[grp],
+                                self.machines[starts + np.maximum(parent_seq - 1, 0)])
+
+    def charge(self, cost: CostAccumulator, select: np.ndarray, words: float,
+               upward: bool) -> int:
+        """Charge one sweep of the selected groups' trees — downward = value
+        broadcast (source tree), upward = write-back combine (destination
+        tree). Returns the max tree height (BSP rounds)."""
+        flat, counts = _expand_csr(self.indptr, select)
+        if flat.size == 0:
+            return 0
+        child = self.machines[flat]
+        parent = self.parents[flat]
+        if upward:
+            cost.send(child, parent, words)
+        else:
+            cost.send(parent, child, words)
+        kmax = int(counts.max(initial=0))
+        height = (int(np.ceil(np.log(kmax + 1) / np.log(max(self.C, 2)))) + 1
+                  if kmax else 0)
+        return height
+
+    def direct_broadcast(self, cost: CostAccumulator, select: np.ndarray,
+                         words: float) -> None:
+        """T1 destination-aware broadcast: each selected group's root sends
+        one copy straight to every machine in its member list (1 hop)."""
+        flat, counts = _expand_csr(self.indptr, select)
+        if flat.size == 0:
+            return
+        cost.send(np.repeat(self.roots[select], counts),
+                  self.machines[flat], words)
+
+
+@dataclasses.dataclass
+class GraphSession:
+    """A long-lived DistEdgeMap session over one orchestrated graph."""
+
+    og: "OrchestratedGraph"  # noqa: F821 — forward ref, avoids import cycle
+    defaults: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        og = self.og
+        self.src_charger = TreeCharger(og.vertex_home, og.src_grp_indptr,
+                                       og.src_grp_machines, og.C)
+        self._report = SessionReport(og.P)
+        self.stats: List = []
+
+    # ------------------------------------------------------------------
+    @property
+    def P(self) -> int:
+        return self.og.P
+
+    @property
+    def C(self) -> int:
+        return self.og.C
+
+    @property
+    def report(self) -> SessionReport:
+        """Cross-round cost accumulation (per-phase words/rounds/work)."""
+        return self._report
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.stats)
+
+    # ------------------------------------------------------------------
+    def edge_map(self, U, f, write_back, merge_value: str = "min",
+                 filter_dst=None, **kw):
+        """Run one DistEdgeMap round through this session, folding its stats
+        and cost report into the session."""
+        from .distedgemap import dist_edge_map  # local: avoids import cycle
+
+        opts = {**self.defaults, **kw}
+        nxt, st = dist_edge_map(self.og, U, f, write_back, merge_value,
+                                filter_dst, session=self, **opts)
+        self.stats.append(st)
+        if st.report is not None:
+            self._report.add(st.report)
+        return nxt, st
+
+    def reset_report(self) -> SessionReport:
+        out, self._report = self._report, SessionReport(self.og.P)
+        self.stats = []
+        return out
+
+
+def session_for(og, **defaults) -> GraphSession:
+    """The graph's cached default session (tree machinery shared by direct
+    `dist_edge_map` calls; does not record rounds)."""
+    sess = getattr(og, "_default_session", None)
+    if sess is None or sess.og is not og:
+        sess = GraphSession(og, defaults)
+        og._default_session = sess
+    return sess

@@ -1,0 +1,10 @@
+"""Pallas TPU API compatibility aliases.
+
+The kernels target the current `pltpu.CompilerParams` name; older jax
+releases (≤0.4.x) ship the same dataclass as `pltpu.TPUCompilerParams`.
+Alias it forward so the kernels run on either version.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+if not hasattr(pltpu, "CompilerParams") and hasattr(pltpu, "TPUCompilerParams"):
+    pltpu.CompilerParams = pltpu.TPUCompilerParams

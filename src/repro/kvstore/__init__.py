@@ -1,10 +1,10 @@
 # Case Study I (§4): a distributed key-value store (concurrent hash table)
 # built directly on the task-data orchestration interface, plus the YCSB
 # workload generators (A/B/C/LOAD with Zipf-distributed key access).
-from .hashtable import DistributedHashTable, KVResult
+from .hashtable import DistributedHashTable, KVResult, MultiGetResult
 from .ycsb import YCSB_WORKLOADS, YCSBWorkload, make_ycsb_batch, zipf_keys
 
 __all__ = [
-    "DistributedHashTable", "KVResult",
+    "DistributedHashTable", "KVResult", "MultiGetResult",
     "YCSB_WORKLOADS", "YCSBWorkload", "make_ycsb_batch", "zipf_keys",
 ]

@@ -1,0 +1,42 @@
+"""JAX version-compat mesh constructors.
+
+The launch/test code targets the current mesh API (`jax.make_mesh(...,
+axis_types=...)`, `AbstractMesh(shape, names, axis_types=...)`); older jax
+releases (≤0.4.x) predate `jax.sharding.AxisType` (Auto was the only
+behavior) and build `AbstractMesh` from (name, size) pairs. These wrappers
+accept the modern call shape and degrade gracefully.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def auto_axis_types_kw(n_axes: int) -> dict:
+    """{'axis_types': (Auto,)*n} on jax versions that have AxisType, else {}."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh(shape, axes, **kw):
+    """`jax.make_mesh` with Auto axis_types where supported."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         **auto_axis_types_kw(len(axes)), **kw)
+
+
+def abstract_mesh(shape, axes):
+    """`AbstractMesh(shape, names)` across jax versions."""
+    if getattr(jax.sharding, "AxisType", None) is not None:
+        return jax.sharding.AbstractMesh(
+            tuple(shape), tuple(axes), **auto_axis_types_kw(len(axes)))
+    return jax.sharding.AbstractMesh(tuple(zip(tuple(axes), tuple(shape))))
+
+
+def cost_analysis(compiled) -> dict:
+    """`Compiled.cost_analysis()` as a flat dict (jax≤0.4 wraps it in a
+    one-element list)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost

@@ -4,7 +4,7 @@ XLA_FLAGS=--xla_force_host_platform_device_count=512 before first init;
 tests and benches see 1 device)."""
 from __future__ import annotations
 
-import jax
+from .compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,12 +14,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     pod's ICI domain."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (host) devices exist — tests/examples."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))

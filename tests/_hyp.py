@@ -1,0 +1,43 @@
+"""Optional-`hypothesis` shim.
+
+The container running tier-1 may not have `hypothesis` installed; importing
+it unconditionally used to abort the whole pytest collection. Test modules
+import `given`/`settings`/`st` from here instead: with hypothesis present
+these are the real objects; without it the property tests are skipped
+per-test (the importorskip happens inside the decorated test) while every
+non-hypothesis test in the same module still runs.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def skipped(*a, **k):
+                pytest.importorskip("hypothesis")
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _AnyStrategy:
+        """Stands in for `hypothesis.strategies`: any strategy constructor
+        call returns a placeholder (only ever passed to the stub `given`)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

@@ -3,7 +3,7 @@ invariants, forest geometry, merge-op semantics, and Theorem 1 load-balance
 properties (measured, under adversarial skew)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (
     CommForest,

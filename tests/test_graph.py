@@ -4,7 +4,7 @@ load-balance claims."""
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.graph import (
     DistVertexSubset,
@@ -247,6 +247,53 @@ def test_property_bfs_cc_random_graphs(seed, n, P):
     labels, _ = cc(og)
     ncomp = nx.number_connected_components(_to_nx(g).to_undirected())
     assert len(np.unique(labels)) == ncomp
+
+
+# ---------------------------------------------------------------------------
+# graph sessions: one session per run, machinery cached, costs accumulated
+# ---------------------------------------------------------------------------
+class TestGraphSession:
+    def test_runinfo_carries_session_report(self, ba_graph):
+        g, og = ba_graph
+        dist, info = bfs(og, source=0)
+        assert info.report is not None
+        assert info.report.num_stages == len(info.stats)
+        # session totals == sum of per-round reports
+        assert info.report.comm_time == pytest.approx(info.comm_time())
+        assert info.report.compute_time == pytest.approx(info.compute_time())
+        assert info.report.rounds == info.bsp_rounds()
+        assert "edgemap_sparse" in info.report.phase_totals()
+
+    def test_session_charger_matches_per_call_costs(self, ba_graph):
+        """Rounds driven through a session (precomputed TreeCharger) charge
+        exactly what direct per-call dist_edge_map charges."""
+        from repro.graph import GraphSession
+
+        g, og = ba_graph
+        vals = np.arange(g.n, dtype=np.float64)
+        f = lambda s, d, w: vals[s]
+        wb = lambda vs, agg: np.ones(vs.size, dtype=bool)
+        U = DistVertexSubset(g.n, indices=np.arange(0, g.n, 7))
+
+        sess = GraphSession(og)
+        _, st_sess = sess.edge_map(U, f, wb, "min", force_mode="sparse")
+        _, st_direct = dist_edge_map(og, U, f, wb, "min", force_mode="sparse")
+        a, b = st_sess.report, st_direct.report
+        np.testing.assert_array_equal(a.sent, b.sent)
+        np.testing.assert_array_equal(a.recv, b.recv)
+        np.testing.assert_array_equal(a.compute, b.compute)
+        assert a.rounds == b.rounds
+
+    def test_shared_session_across_algorithms(self, ba_graph):
+        from repro.graph import GraphSession
+
+        g, og = ba_graph
+        sess = GraphSession(og)
+        bfs(og, source=0, session=sess)
+        n_after_bfs = sess.report.num_stages
+        assert n_after_bfs > 0
+        cc(og, session=sess)
+        assert sess.report.num_stages > n_after_bfs
 
 
 # ---------------------------------------------------------------------------

@@ -2,7 +2,7 @@
 and workloads, plus the skew-resilience claims."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.kvstore import DistributedHashTable, make_ycsb_batch, zipf_keys
 

@@ -11,6 +11,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import all_arch_ids, get_config, get_reduced
+from repro.launch.compat import abstract_mesh, make_mesh
 from repro.launch.specs import SHAPES, input_specs, shape_applicable
 
 
@@ -43,8 +44,7 @@ class TestInputSpecs:
 
 class TestShardingRules:
     def _mesh(self):
-        return jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_mesh((1, 1), ("data", "model"))
 
     def test_param_specs_cover_tree(self):
         from repro.launch.sharding import param_pspecs
@@ -65,9 +65,7 @@ class TestShardingRules:
         """A dim not divisible by its axis must fall back to replication."""
         from repro.launch.sharding import _resolve
 
-        mesh = jax.sharding.AbstractMesh(
-            (4, 16), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = abstract_mesh((4, 16), ("data", "model"))
         spec = _resolve(("F", "M"), (100, 49155), mesh, True, True)
         assert spec[1] is None  # 49155 % 16 != 0 -> replicate
         assert spec[0] == "data"  # 100 % 4 == 0 -> FSDP ok
@@ -79,9 +77,7 @@ class TestShardingRules:
         from repro.models import Model
 
         cfg = get_reduced("granite-moe-1b-a400m")
-        mesh = jax.sharding.AbstractMesh(
-            (1, 4), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = abstract_mesh((1, 4), ("data", "model"))
         model = Model(cfg, mesh=mesh)
         shapes = jax.eval_shape(lambda: model.init(0))
         specs = param_pspecs(shapes, model.cfg, mesh, tp=False)
@@ -106,17 +102,17 @@ def test_reduced_config_compiles_on_small_mesh():
         import sys; sys.path.insert(0, "src")
         import jax, dataclasses
         from repro.configs import get_reduced
+        from repro.launch.compat import cost_analysis, make_mesh
         from repro.launch.steps import build_train_step
         from repro.launch.hlo import parse_collectives
         import repro.launch.specs as specs_mod
         # shrink the workload shape for test scale
         specs_mod.SHAPES["train_4k"] = dict(seq=64, batch=8, kind="train")
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = get_reduced("granite-moe-1b-a400m")
         step = build_train_step(cfg, mesh, "train_4k", grad_accum=1)
         compiled = step.fn.lower(*step.arg_specs).compile()
-        assert compiled.cost_analysis().get("flops", 0) > 0
+        assert cost_analysis(compiled).get("flops", 0) > 0
         colls = parse_collectives(compiled.as_text())
         assert colls.count > 0  # EP all_to_all / psum must be present
         print("OK", int(colls.count))

@@ -1,0 +1,347 @@
+"""Ragged multi-get + Orchestrator session tests.
+
+Covers the API-redesign acceptance criteria:
+  * CSR TaskBatch construction (flat convenience vs explicit CSR);
+  * an arity-k multi-get stage == k chained arity-1 stages under
+    write_back="add";
+  * all four registered engines agree numerically on ragged batches,
+    including arity-0 tasks and duplicate keys within one task;
+  * `Orchestrator.run_stage` reuses one CommForest across stages;
+  * the arity-1 cost path is unchanged by the redesign (legacy flat
+    construction and 1-wide CSR construction charge identical words/rounds);
+  * kv-store multi-get returns the gathered view + mask.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CommForest,
+    DataStore,
+    ENGINES,
+    Orchestrator,
+    TaskBatch,
+    gather_values,
+    make_engine,
+    orchestration,
+    register_engine,
+)
+from repro.kvstore import DistributedHashTable
+
+ENGINE_NAMES = ["tdorch", "push", "pull", "sort"]
+
+
+def _ragged_batch(rng, n, nkeys, P, max_arity=3, dup_frac=0.3):
+    """Random ragged batch with arity-0 tasks and intra-task duplicates."""
+    key_lists = []
+    for _ in range(n):
+        a = int(rng.integers(0, max_arity + 1))
+        ks = rng.integers(0, nkeys, a).tolist()
+        if a >= 2 and rng.random() < dup_frac:
+            ks[1] = ks[0]  # duplicate key within one task
+        key_lists.append(ks)
+    return key_lists, TaskBatch.from_ragged(
+        np.zeros((n, 1)), key_lists, TaskBatch.even_origins(n, P),
+        write_keys=rng.integers(0, nkeys, n))
+
+
+# ---------------------------------------------------------------------------
+# TaskBatch CSR layout
+# ---------------------------------------------------------------------------
+class TestTaskBatchCSR:
+    def test_flat_construction_builds_csr(self):
+        tb = TaskBatch(contexts=np.zeros((4, 1)),
+                       read_keys=np.array([5, -1, 7, 5]),
+                       origin=np.zeros(4, dtype=np.int64))
+        np.testing.assert_array_equal(tb.read_indptr, [0, 1, 1, 2, 3])
+        np.testing.assert_array_equal(tb.read_indices, [5, 7, 5])
+        np.testing.assert_array_equal(tb.arity, [1, 0, 1, 1])
+        np.testing.assert_array_equal(tb.primary_read, [5, -1, 7, 5])
+        assert tb.max_arity == 1 and tb.nnz == 3
+
+    def test_csr_construction_arity1_exposes_flat_view(self):
+        tb = TaskBatch(contexts=np.zeros((3, 1)), origin=np.zeros(3, dtype=np.int64),
+                       read_indptr=np.array([0, 1, 1, 2]),
+                       read_indices=np.array([4, 9]))
+        np.testing.assert_array_equal(tb.read_keys, [4, -1, 9])
+
+    def test_ragged_has_no_flat_view(self):
+        tb = TaskBatch.from_ragged(np.zeros((2, 1)), [[1, 2], [3]],
+                                   np.zeros(2, dtype=np.int64))
+        assert tb.read_keys is None
+        assert tb.max_arity == 2
+        np.testing.assert_array_equal(tb.primary_read, [1, 3])
+        np.testing.assert_array_equal(tb.pair_task, [0, 0, 1])
+
+    def test_default_write_keys_follow_primary(self):
+        tb = TaskBatch.from_ragged(np.zeros((2, 1)), [[7, 2], []],
+                                   np.zeros(2, dtype=np.int64))
+        np.testing.assert_array_equal(tb.write_keys, [7, -1])
+
+    def test_rejects_both_flat_and_csr(self):
+        with pytest.raises(ValueError):
+            TaskBatch(contexts=np.zeros((1, 1)), read_keys=np.array([0]),
+                      origin=np.zeros(1, dtype=np.int64),
+                      read_indptr=np.array([0, 1]), read_indices=np.array([0]))
+
+    def test_gathered_view_padding_and_mask(self):
+        store = DataStore.create(8, 2, value_width=2)
+        store.values[:] = np.arange(16, dtype=np.float64).reshape(8, 2)
+        tb = TaskBatch.from_ragged(np.zeros((3, 1)), [[1, 3, 3], [], [5]],
+                                   np.zeros(3, dtype=np.int64))
+        vals, mask = gather_values(tb, store)
+        assert vals.shape == (3, 3, 2) and mask.shape == (3, 3)
+        np.testing.assert_array_equal(mask, [[True, True, True],
+                                             [False, False, False],
+                                             [True, False, False]])
+        np.testing.assert_allclose(vals[0], store.values[[1, 3, 3]])
+        np.testing.assert_allclose(vals[1], 0.0)
+        np.testing.assert_allclose(vals[2, 0], store.values[5])
+
+
+# ---------------------------------------------------------------------------
+# equivalence: arity-k stage == k chained arity-1 stages (write_back="add")
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ENGINE_NAMES)
+def test_multiget_equals_chained_single_gets(engine):
+    """One arity-k stage summing its k reads into a (disjoint) write key must
+    equal k chained arity-1 stages each adding one read's value."""
+    rng = np.random.default_rng(11)
+    P, nread, k, n = 8, 64, 3, 400
+    nkeys = nread + n  # write keys disjoint from read keys → chaining is exact
+    init = np.zeros((nkeys, 1))
+    init[:nread] = rng.random((nread, 1))
+
+    keys = rng.integers(0, nread, size=(n, k))
+    write_keys = nread + np.arange(n, dtype=np.int64)
+    origin = TaskBatch.even_origins(n, P)
+
+    # ---- one ragged stage
+    store_a = DataStore.create(nkeys, P, value_width=1, chunk_words=8)
+    store_a.values[:] = init
+    tasks = TaskBatch.from_ragged(np.zeros((n, 1)), list(keys),
+                                  origin, write_keys=write_keys)
+
+    def f_multi(ctx, vals, mask):
+        return {"update": (vals[..., 0] * mask).sum(axis=1, keepdims=True)}
+
+    orchestration(tasks, f_multi, store_a, write_back="add", engine=engine)
+
+    # ---- k chained arity-1 stages on one session
+    store_b = DataStore.create(nkeys, P, value_width=1, chunk_words=8)
+    store_b.values[:] = init
+    sess = Orchestrator(store_b, engine=engine)
+    for j in range(k):
+        stage = TaskBatch(contexts=np.zeros((n, 1)), read_keys=keys[:, j],
+                          write_keys=write_keys, origin=origin)
+        sess.run_stage(stage, lambda ctx, vals: {"update": vals},
+                       write_back="add")
+    assert sess.num_stages == k
+    np.testing.assert_allclose(store_a.values, store_b.values, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# equivalence: all registered engines agree on ragged batches
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("op", ["add", "min", "max", "write"])
+def test_engines_agree_on_ragged_batches(op):
+    rng = np.random.default_rng(7)
+    P, nkeys, n = 8, 96, 1500
+    key_lists, tasks = _ragged_batch(rng, n, nkeys, P)
+    upd = rng.random((n, 1))
+
+    def f(ctx, vals, mask):
+        if vals.ndim == 3:
+            red = (vals[..., 0] * mask).sum(axis=1, keepdims=True)
+        else:
+            red = vals[:, :1]
+        return {"update": upd, "result": red}
+
+    outs = {}
+    for eng in ENGINE_NAMES:
+        store = DataStore.create(nkeys, P, value_width=1, chunk_words=8, init=2.0)
+        res = orchestration(tasks, f, store, write_back=op, engine=eng,
+                            return_results=True)
+        outs[eng] = (store.values.copy(), res.results.copy())
+    ref_v, ref_r = outs["tdorch"]
+
+    # sequential oracle for the gathered sums
+    want = np.array([[sum(2.0 for _ in ks)] for ks in key_lists])
+    np.testing.assert_allclose(ref_r, want)
+    for eng in ENGINE_NAMES[1:]:
+        np.testing.assert_allclose(outs[eng][0], ref_v, err_msg=f"{eng} values")
+        np.testing.assert_allclose(outs[eng][1], ref_r, err_msg=f"{eng} results")
+
+
+def test_refcount_counts_every_pair():
+    """Phase 1 climbs one descriptor per (task, key) pair, so observed
+    refcounts sum to nnz, with intra-task duplicates counted."""
+    P, nkeys = 4, 16
+    tasks = TaskBatch.from_ragged(np.zeros((3, 1)), [[2, 2, 5], [2], []],
+                                  TaskBatch.even_origins(3, P))
+    store = DataStore.create(nkeys, P, value_width=1, chunk_words=4)
+    res = orchestration(tasks, lambda c, v, m: {}, store)
+    assert res.refcount.get(2) == 3
+    assert res.refcount.get(5) == 1
+    assert sum(res.refcount.values()) == tasks.nnz == 4
+
+
+# ---------------------------------------------------------------------------
+# sessions
+# ---------------------------------------------------------------------------
+class TestOrchestratorSession:
+    def test_forest_built_once_per_session(self, monkeypatch):
+        store = DataStore.create(64, 8, value_width=1, chunk_words=8)
+        sess = Orchestrator(store, engine="tdorch")
+        forest = sess.forest
+        assert forest is not None
+
+        calls = []
+        real_build = CommForest.build
+        monkeypatch.setattr(CommForest, "build",
+                            staticmethod(lambda *a, **k: calls.append(a) or
+                                         real_build(*a, **k)))
+        rng = np.random.default_rng(0)
+        for _ in range(3):
+            tasks = TaskBatch(contexts=np.zeros((100, 1)),
+                              read_keys=rng.integers(0, 64, 100),
+                              origin=TaskBatch.even_origins(100, 8))
+            sess.run_stage(tasks, lambda c, v: {"update": np.ones((100, 1))})
+        assert calls == []  # no rebuild across stages
+        assert sess.forest is forest
+        assert sess.num_stages == 3
+
+    def test_session_report_accumulates_phases(self):
+        store = DataStore.create(64, 8, value_width=1, chunk_words=8)
+        sess = Orchestrator(store, engine="tdorch")
+        rng = np.random.default_rng(1)
+        single = []
+        for _ in range(2):
+            tasks = TaskBatch(contexts=np.zeros((200, 1)),
+                              read_keys=rng.integers(0, 64, 200),
+                              origin=TaskBatch.even_origins(200, 8))
+            r = sess.run_stage(tasks, lambda c, v: {"update": np.ones((200, 1))})
+            single.append(r.report)
+        totals = sess.report.phase_totals()
+        assert sess.report.num_stages == 2
+        for name in ["phase1_contention_detection", "phase2_push_pull",
+                     "phase3_execute", "phase4_write_back"]:
+            assert totals[name]["stages"] == 2
+            want_words = sum(float(ph.sent.sum()) for rep in single
+                             for ph in rep.phases if ph.name == name)
+            assert totals[name]["total_words"] == want_words
+        assert sess.report.rounds == sum(r.rounds for r in single)
+
+    def test_orchestration_shim_signature_preserved(self):
+        """The one-shot shim keeps its historical signature."""
+        store = DataStore.create(16, 4, value_width=1, chunk_words=4)
+        tasks = TaskBatch(contexts=np.zeros((10, 1)),
+                          read_keys=np.arange(10) % 16,
+                          origin=TaskBatch.even_origins(10, 4))
+        res = orchestration(tasks, lambda c, v: {"update": np.ones((10, 1))},
+                            store, "add", engine="tdorch",
+                            return_results=False, C=4)
+        assert res.report is not None
+
+    def test_engine_registry_roundtrip(self):
+        assert set(ENGINE_NAMES) <= set(ENGINES)
+        eng = make_engine("tdorch", 8, C=4)
+        assert type(eng) is ENGINES["tdorch"]
+        with pytest.raises(KeyError):
+            make_engine("nope", 8)
+
+    def test_register_engine_decorator(self):
+        @register_engine("_test_engine")
+        class _TestEngine(ENGINES["pull"]):
+            pass
+
+        try:
+            assert ENGINES["_test_engine"] is _TestEngine
+            assert isinstance(make_engine("_test_engine", 4), _TestEngine)
+            with pytest.raises(ValueError):
+                register_engine("_test_engine")(dict)
+        finally:
+            ENGINES.pop("_test_engine", None)
+
+
+# ---------------------------------------------------------------------------
+# arity-1 cost invariance: the redesign must not move a single word/round
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ENGINE_NAMES)
+def test_arity1_costs_identical_flat_vs_csr(engine):
+    """A flat-constructed batch and the equivalent 1-wide CSR batch must be
+    charged identical per-phase words, rounds, and work."""
+    rng = np.random.default_rng(5)
+    P, nkeys, n = 8, 64, 2000
+    keys = rng.integers(0, nkeys, n)
+    wk = np.where(rng.random(n) < 0.5, keys, rng.integers(0, nkeys, n))
+    has = rng.random(n) < 0.9
+    flat_keys = np.where(has, keys, -1)
+    origin = TaskBatch.even_origins(n, P)
+    upd = rng.random((n, 1))
+
+    def run(tasks):
+        store = DataStore.create(nkeys, P, value_width=1, chunk_words=8)
+        res = orchestration(tasks, lambda c, v: {"update": upd, "result": v},
+                            store, write_back="add", engine=engine,
+                            return_results=True)
+        return [(p.name, p.rounds, p.sent.tolist(), p.recv.tolist(),
+                 p.compute.tolist()) for p in res.report.phases]
+
+    a = run(TaskBatch(contexts=np.zeros((n, 2)), read_keys=flat_keys,
+                      write_keys=wk, origin=origin))
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(has, out=indptr[1:])
+    b = run(TaskBatch(contexts=np.zeros((n, 2)), write_keys=wk, origin=origin,
+                      read_indptr=indptr, read_indices=keys[has]))
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# kv-store multi-get front door
+# ---------------------------------------------------------------------------
+class TestKVMultiGet:
+    def test_multi_get_returns_gathered_view(self):
+        P, nkeys = 8, 128
+        ht = DistributedHashTable(nkeys, P, value_width=2)
+        rng = np.random.default_rng(2)
+        init = rng.random((nkeys, 2))
+        ht.bulk_load(np.arange(nkeys), init)
+        groups = [[3, 7, 3], [], [100], [1, 2]]
+        res = ht.multi_get(groups)
+        assert res.values.shape == (4, 3, 2)
+        np.testing.assert_array_equal(
+            res.mask, [[True, True, True], [False, False, False],
+                       [True, False, False], [True, True, False]])
+        np.testing.assert_allclose(res.values[0], init[[3, 7, 3]])
+        np.testing.assert_allclose(res.values[3, :2], init[[1, 2]])
+        np.testing.assert_allclose(res.values[1], 0.0)
+
+    def test_multi_get_accepts_csr_and_all_engines_agree(self):
+        P, nkeys = 8, 64
+        rng = np.random.default_rng(4)
+        init = rng.random((nkeys, 1))
+        indptr = np.array([0, 2, 2, 5], dtype=np.int64)
+        indices = np.array([1, 1, 60, 2, 9], dtype=np.int64)
+        outs = {}
+        for eng in ENGINE_NAMES:
+            ht = DistributedHashTable(nkeys, P, value_width=1)
+            ht.bulk_load(np.arange(nkeys), init)
+            r = ht.multi_get((indptr, indices), engine=eng)
+            outs[eng] = (r.values.copy(), r.mask.copy())
+        for eng in ENGINE_NAMES[1:]:
+            np.testing.assert_allclose(outs[eng][0], outs["tdorch"][0])
+            np.testing.assert_array_equal(outs[eng][1], outs["tdorch"][1])
+
+    def test_batches_share_one_session(self):
+        ht = DistributedHashTable(64, 8, value_width=1)
+        keys = np.arange(50, dtype=np.int64)
+        ops = np.tile([1.0, 0.0], (50, 1))
+        ht.execute_batch(keys, np.ones(50, bool), ops)
+        ht.execute_batch(keys, np.ones(50, bool), ops)
+        sess = ht.session("tdorch")
+        assert sess.num_stages == 2
+        assert ht.session_report("tdorch").num_stages == 2
+        # a different engine gets its own session
+        ht.execute_batch(keys, np.ones(50, bool), ops, engine="pull")
+        assert ht.session("pull").num_stages == 1
+        assert sess.num_stages == 2

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.spmd import (
     MoEDispatchConfig,
@@ -132,8 +132,8 @@ def test_multidevice_shard_map_equivalence():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.core.spmd import MoEDispatchConfig, moe_push_pull, moe_reference
-        mesh = jax.make_mesh((4,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.compat import make_mesh
+        mesh = make_mesh((4,), ("model",))
         rng = np.random.default_rng(1)
         T, d, f, E, k, ep = 128, 16, 32, 8, 2, 4
         x = jnp.asarray(rng.normal(size=(T, d)), jnp.float32)

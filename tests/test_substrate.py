@@ -125,10 +125,10 @@ class TestCheckpoint:
             sys.path.insert(0, "src")
             from jax.sharding import PartitionSpec as P, NamedSharding
             from repro.checkpoint import save_checkpoint, restore_checkpoint
+            from repro.launch.compat import make_mesh
             tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
             path = save_checkpoint({str(tmp_path)!r}, 1, tree)
-            mesh = jax.make_mesh((4,), ("data",),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = make_mesh((4,), ("data",))
             sh = {{"w": NamedSharding(mesh, P("data", None))}}
             got, _ = restore_checkpoint(path, tree, shardings=sh)
             assert len(got["w"].sharding.device_set) == 4

@@ -2,7 +2,7 @@
 and adversarial workloads (hypothesis-driven where randomized)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import DataStore, TaskBatch, orchestration
 from repro.kernels.flash_decode.kernel import flash_decode
