@@ -5,6 +5,7 @@
     Fig. 8/9 bench_scaling    strong + weak scaling (ER vs BA)
     Fig. 10  bench_breakdown  comm/compute/sync breakdown
     Tab. 3/4 bench_ablation   no-TD-Orch + T1/T2/T3 ablations
+    (beyond) bench_skew       adaptive hot-chunk replication on vs off
     (beyond) bench_moe        TD-Orch vs push/pull as the MoE dispatcher
     (beyond) bench_kernels    per-kernel microbenchmarks
 
@@ -17,11 +18,12 @@ import sys
 import time
 
 from . import (bench_ablation, bench_breakdown, bench_graph, bench_kernels,
-               bench_moe, bench_scaling, bench_ycsb)
+               bench_moe, bench_scaling, bench_skew, bench_ycsb)
 from .common import print_csv, write_json
 
 SUITES = {
     "ycsb": bench_ycsb,
+    "skew": bench_skew,
     "graph": bench_graph,
     "scaling": bench_scaling,
     "breakdown": bench_breakdown,

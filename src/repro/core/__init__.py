@@ -11,6 +11,8 @@ from .baselines import DirectPullEngine, DirectPushEngine, SortBasedEngine
 from .execution import gather_values
 from .interface import ENGINES, make_engine, orchestration, register_engine
 from .mergeops import MERGE_OPS, MergeOp, get_merge_op
+from .replication import (HotChunkReplicator, ReplicaSet, ReplicationConfig,
+                          make_replicator)
 from .session import Orchestrator
 
 __all__ = [
@@ -22,5 +24,6 @@ __all__ = [
     "gather_values",
     "ENGINES", "make_engine", "orchestration", "register_engine",
     "MERGE_OPS", "MergeOp", "get_merge_op",
+    "HotChunkReplicator", "ReplicaSet", "ReplicationConfig", "make_replicator",
     "Orchestrator",
 ]

@@ -9,6 +9,12 @@ unit. Direct-pull fetches every pair's chunk to the task's origin; direct-push
 ships the task to its *primary* key's home and pulls the remaining chunks
 there; sort-based sorts by primary key and broadcasts every requested chunk
 to the sorted runs. Arity-1 batches follow the exact original cost paths.
+
+All three consult the session's hot-chunk `ReplicaSet` when one is passed
+(core/replication.py): reads of chunks replicated at the consuming machine
+are served locally (replica-local words), and writes to replicated chunks
+are write-through-propagated home → holders — so replication benefits are
+comparable engine-to-engine on the same directory.
 """
 from __future__ import annotations
 
@@ -22,6 +28,19 @@ from .engine import OrchestrationResult, _L0_HEADER
 from .execution import apply_writes, execute, update_width
 from .mergeops import MergeOp, get_merge_op
 from .registry import register_engine
+from .replication import charge_write_through
+
+
+def _split_replica_local(cost, store, replicas, machines, keys):
+    """Drop (machine, key) pairs served by a local replica, charging their
+    reads as replica-local words; returns the remaining remote pairs. Every
+    engine consults the session's directory through this one helper."""
+    if replicas is None or replicas.hot_ids.size == 0 or keys.size == 0:
+        return machines, keys
+    loc = replicas.holds(keys, machines)
+    if loc.any():
+        cost.local(machines[loc], store.value_width)
+    return machines[~loc], keys[~loc]
 
 
 def _dedup_pairs(machine: np.ndarray, keys: np.ndarray, num_keys: int):
@@ -42,7 +61,8 @@ class DirectPullEngine:
         self.P = int(num_machines)
         self.work_per_task = work_per_task
 
-    def run_stage(self, tasks, store, f, write_back="add", return_results=False):
+    def run_stage(self, tasks, store, f, write_back="add", return_results=False,
+                  replicas=None):
         merge = get_merge_op(write_back)
         cost = CostAccumulator(self.P)
         B = store.chunk_words
@@ -51,11 +71,13 @@ class DirectPullEngine:
         if tasks.nnz:
             org, key = _dedup_pairs(tasks.origin[tasks.pair_task],
                                     tasks.read_indices, store.num_keys)
-            hm = store.home[key]
-            cost.send(org, hm, 2)  # request: key + reply address
-            cost.work(hm, 1.0)
-            cost.send(hm, org, B + 1)  # reply: the chunk
-            cost.tick(2)
+            org, key = _split_replica_local(cost, store, replicas, org, key)
+            if key.size:
+                hm = store.home[key]
+                cost.send(org, hm, 2)  # request: key + reply address
+                cost.work(hm, 1.0)
+                cost.send(hm, org, B + 1)  # reply: the chunk
+                cost.tick(2)
         cost.end()
 
         cost.begin("pull_execute")
@@ -77,6 +99,8 @@ class DirectPullEngine:
                 cost.send(tasks.origin[writes], hm, w_u + 1)
                 cost.work(hm, 1.0)
                 cost.tick()
+                charge_write_through(cost, store.home, replicas,
+                                     tasks.write_keys[writes], w_u)
             apply_writes(tasks, store, updates, merge, cost)
         cost.end()
 
@@ -95,7 +119,8 @@ class DirectPushEngine:
         self.P = int(num_machines)
         self.work_per_task = work_per_task
 
-    def run_stage(self, tasks, store, f, write_back="add", return_results=False):
+    def run_stage(self, tasks, store, f, write_back="add", return_results=False,
+                  replicas=None):
         merge = get_merge_op(write_back)
         cost = CostAccumulator(self.P)
         sigma = tasks.ctx_words
@@ -106,10 +131,19 @@ class DirectPushEngine:
         exec_site[reads] = store.home[primary[reads]]
         wr_only = (~reads) & (tasks.write_keys >= 0)
         exec_site[wr_only] = store.home[tasks.write_keys[wr_only]]
+        if replicas is not None and replicas.hot_ids.size:
+            # primary chunk replicated at the origin: no RPC — the task
+            # executes in place against the local replica
+            prim_local = np.zeros(tasks.n, dtype=bool)
+            prim_local[reads] = replicas.holds(primary[reads],
+                                               tasks.origin[reads])
+            exec_site[prim_local] = tasks.origin[prim_local]
 
         cost.begin("push_offload")
         cost.send(tasks.origin, exec_site, sigma + _L0_HEADER)
         cost.tick()
+        if replicas is not None and replicas.hot_ids.size and prim_local.any():
+            cost.local(tasks.origin[prim_local], store.value_width)
         if tasks.max_arity > 1:
             # secondary chunks fetched to the execution site, deduped per
             # (site, key) — same RPC round-trip shape as the offload
@@ -119,10 +153,13 @@ class DirectPushEngine:
             if sec.size:
                 site, key = _dedup_pairs(exec_site[tasks.pair_task[sec]],
                                          tasks.read_indices[sec], store.num_keys)
-                hm = store.home[key]
-                cost.send(site, hm, 2)
-                cost.send(hm, site, B + 1)
-                cost.tick(2)
+                site, key = _split_replica_local(cost, store, replicas,
+                                                 site, key)
+                if key.size:
+                    hm = store.home[key]
+                    cost.send(site, hm, 2)
+                    cost.send(hm, site, B + 1)
+                    cost.tick(2)
         cost.end()
 
         cost.begin("push_execute")
@@ -146,6 +183,10 @@ class DirectPushEngine:
                                         store.num_keys)
                 cost.send(org, store.home[key], w_u + 1)
                 cost.tick()
+            if writes.any():
+                charge_write_through(cost, store.home, replicas,
+                                     tasks.write_keys[writes],
+                                     update_width(updates))
             apply_writes(tasks, store, updates, merge, cost)
         cost.end()
 
@@ -164,7 +205,8 @@ class SortBasedEngine:
         self.P = int(num_machines)
         self.work_per_task = work_per_task
 
-    def run_stage(self, tasks, store, f, write_back="add", return_results=False):
+    def run_stage(self, tasks, store, f, write_back="add", return_results=False,
+                  replicas=None):
         merge = get_merge_op(write_back)
         cost = CostAccumulator(self.P)
         P = self.P
@@ -194,8 +236,10 @@ class SortBasedEngine:
         if tasks.nnz:
             mch, key = _dedup_pairs(sorted_machine[tasks.pair_task],
                                     tasks.read_indices, store.num_keys)
-            cost.send(store.home[key], mch, B + 1)
-            cost.tick()
+            mch, key = _split_replica_local(cost, store, replicas, mch, key)
+            if key.size:
+                cost.send(store.home[key], mch, B + 1)
+                cost.tick()
         cost.end()
 
         cost.begin("sort_execute")
@@ -213,6 +257,8 @@ class SortBasedEngine:
                 mch, key = _dedup_pairs(sorted_machine[writes],
                                         tasks.write_keys[writes], store.num_keys)
                 cost.send(mch, store.home[key], w_u + 1)
+                charge_write_through(cost, store.home, replicas,
+                                     tasks.write_keys[writes], w_u)
             apply_writes(tasks, store, updates, merge, cost)
         results = out.get("result")
         if return_results and results is not None:

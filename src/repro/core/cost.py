@@ -17,6 +17,12 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+# Phase name under which the replication subsystem (core/replication.py)
+# charges hot-chunk refresh broadcasts. A dedicated name means
+# `SessionReport.phase_totals()` — and the refresh/steady-state split below —
+# separate the amortized replication investment from serving traffic.
+REPLICA_REFRESH_PHASE = "replica_refresh"
+
 
 @dataclasses.dataclass
 class PhaseCost:
@@ -26,6 +32,7 @@ class PhaseCost:
     sent: np.ndarray  # words sent, per machine
     recv: np.ndarray  # words received, per machine
     compute: np.ndarray  # work units, per machine
+    local: np.ndarray  # words served from a machine-local replica (no wire)
     rounds: int = 0
 
     @property
@@ -39,6 +46,7 @@ class PhaseCost:
             "phase": self.name,
             "rounds": self.rounds,
             "total_words": float(self.sent.sum()),
+            "local_words": float(self.local.sum()),
             "max_comm": float(self.comm.max(initial=0.0)),
             "mean_comm": float(self.comm.mean()) if self.comm.size else 0.0,
             "max_compute": float(self.compute.max(initial=0.0)),
@@ -63,6 +71,7 @@ class CostAccumulator:
             sent=np.zeros(self.P, dtype=np.float64),
             recv=np.zeros(self.P, dtype=np.float64),
             compute=np.zeros(self.P, dtype=np.float64),
+            local=np.zeros(self.P, dtype=np.float64),
         )
         return self._open
 
@@ -92,6 +101,16 @@ class CostAccumulator:
         machine = np.asarray(machine, dtype=np.int64).ravel()
         units = np.broadcast_to(np.asarray(units, dtype=np.float64).ravel(), machine.shape)
         np.add.at(ph.compute, machine, units)
+
+    def local(self, machine: np.ndarray, words) -> None:
+        """Record words served from a machine-local replica: a memory read,
+        not a message — tracked separately so benchmarks can report how much
+        traffic replication absorbed (never enters `comm`)."""
+        ph = self._require()
+        machine = np.asarray(machine, dtype=np.int64).ravel()
+        words = np.broadcast_to(np.asarray(words, dtype=np.float64).ravel(),
+                                machine.shape)
+        np.add.at(ph.local, machine, words)
 
     def tick(self, rounds: int = 1) -> None:
         self._require().rounds += rounds
@@ -130,6 +149,11 @@ class StageReport:
     @property
     def compute(self) -> np.ndarray:
         return self._sum("compute")
+
+    @property
+    def local(self) -> np.ndarray:
+        """Per-machine words served from local replicas (no wire traffic)."""
+        return self._sum("local")
 
     @property
     def comm(self) -> np.ndarray:
@@ -214,6 +238,10 @@ class SessionReport:
         return self._sum("compute")
 
     @property
+    def local(self) -> np.ndarray:
+        return self._sum("local")
+
+    @property
     def comm(self) -> np.ndarray:
         """Per-machine communication, summed across the session's stages."""
         return self._sum("comm")
@@ -221,6 +249,24 @@ class SessionReport:
     @property
     def rounds(self) -> int:
         return sum(st.rounds for st in self.stages)
+
+    # ---- replication accounting (core/replication.py) --------------------
+    @property
+    def replica_refresh_words(self) -> float:
+        """Words spent broadcasting newly elected hot chunks (the amortized
+        replication investment, charged under `replica_refresh`)."""
+        return sum(float(ph.sent.sum()) for st in self.stages
+                   for ph in st.phases if ph.name == REPLICA_REFRESH_PHASE)
+
+    @property
+    def steady_state_words(self) -> float:
+        """Total words minus replica-refresh words: the serving traffic."""
+        return float(self.sent.sum()) - self.replica_refresh_words
+
+    @property
+    def replica_local_words(self) -> float:
+        """Words served from machine-local replicas instead of the wire."""
+        return float(self.local.sum())
 
     @property
     def comm_time(self) -> float:
@@ -239,11 +285,12 @@ class SessionReport:
         for st in self.stages:
             for ph in st.phases:
                 agg = out.setdefault(ph.name, {
-                    "rounds": 0, "total_words": 0.0, "work": 0.0,
-                    "max_comm": 0.0, "stages": 0,
+                    "rounds": 0, "total_words": 0.0, "local_words": 0.0,
+                    "work": 0.0, "max_comm": 0.0, "stages": 0,
                 })
                 agg["rounds"] += ph.rounds
                 agg["total_words"] += float(ph.sent.sum())
+                agg["local_words"] += float(ph.local.sum())
                 agg["work"] += float(ph.compute.sum())
                 agg["max_comm"] += float(ph.comm.max(initial=0.0))
                 agg["stages"] += 1
@@ -262,6 +309,9 @@ class SessionReport:
             "stages": self.num_stages,
             "rounds": self.rounds,
             "total_words": float(self.sent.sum()),
+            "replica_refresh_words": self.replica_refresh_words,
+            "steady_state_words": self.steady_state_words,
+            "replica_local_words": self.replica_local_words,
             "comm_time": self.comm_time,
             "compute_time": self.compute_time,
             "comm_imbalance": self.imbalance()["comm"],

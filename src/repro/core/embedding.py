@@ -10,6 +10,12 @@ the H hottest rows in a replicated cache (VMEM-resident on TPU, vs HBM
 gathers for cold rows), so the gather stream touches HBM only for the
 Zipf tail. This module implements that: exact results, hot-row hit-rate
 reported, cache refreshed from the live histogram every `refresh` steps.
+
+This module is a thin client of the session-level hot-chunk subsystem
+(`core/replication.py`): the decayed-histogram election that picks the hot
+rows is `replication.decayed_election` — the exact same electorate the
+`Orchestrator` / `GraphSession` replica directories run — applied to a
+replicated on-device cache instead of a machine bitmap.
 """
 from __future__ import annotations
 
@@ -19,7 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .spmd import detect_contention, select_hot
+from .replication import decayed_election
+from .spmd import detect_contention
 
 
 class EmbedCache(NamedTuple):
@@ -42,11 +49,12 @@ def init_cache(table: jnp.ndarray, num_hot: int) -> EmbedCache:
 def refresh_cache(table: jnp.ndarray, cache: EmbedCache,
                   decay: float = 0.5) -> EmbedCache:
     """Re-elect the hot set from the running histogram (Phase 2 pull: the
-    elected rows are replicated). Decay keeps the histogram adaptive."""
+    elected rows are replicated). One `decayed_election` step of the shared
+    subsystem; decay keeps the histogram adaptive."""
     H = cache.hot_ids.shape[0]
-    hot_ids, lookup, _ = select_hot(cache.counts, H, min_count=1)
+    hot_ids, lookup, _valid, counts = decayed_election(
+        cache.counts, H, decay=decay, min_count=1)
     hot_rows = table[hot_ids]
-    counts = (cache.counts.astype(jnp.float32) * decay).astype(jnp.int32)
     return EmbedCache(hot_ids=hot_ids.astype(jnp.int32), hot_rows=hot_rows,
                       lookup=lookup, counts=counts)
 

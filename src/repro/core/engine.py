@@ -14,6 +14,14 @@ Phases (§3):
      ride their own forest with en-route ⊗-combining — this is exactly the
      "destination tree" construction TDO-GP uses (§5.1).
 
+Sessions may pass a `ReplicaSet` (the hot-chunk directory maintained by
+`core/replication.py`): pairs whose chunk is replicated at the requesting
+machine skip the forest entirely and execute in place (their reads are
+replica-local words, not wire traffic), and Phase-4 write-backs to
+replicated chunks are write-through-propagated from the home copy to every
+holder. With no directory (the default) nothing changes — the cost paths
+below are word-for-word the unreplicated engine.
+
 Implementation note (simulation fidelity): numeric results are computed by a
 single vectorized execute/apply pass — identical for TD-Orch and every
 baseline — while *cost* (per-machine words sent/received, work executed,
@@ -35,6 +43,7 @@ from .datastore import DataStore, TaskBatch
 from .execution import apply_writes, call_lambda, gather_values
 from .mergeops import MergeOp, get_merge_op
 from .registry import register_engine
+from .replication import ReplicaSet, charge_write_through
 
 # words charged per message row (header: key + level/count bookkeeping)
 _L0_HEADER = 2  # key + count
@@ -112,6 +121,7 @@ class TDOrchEngine:
         f: Callable[[np.ndarray, np.ndarray], Dict[str, np.ndarray]],
         write_back: str | MergeOp = "add",
         return_results: bool = False,
+        replicas: ReplicaSet | None = None,
     ) -> OrchestrationResult:
         merge = get_merge_op(write_back)
         P, forest = self.P, self.forest
@@ -126,6 +136,13 @@ class TDOrchEngine:
         # each (task, key) pair gets a co-location site; tasks with no read
         # execute in place, the rest where their primary pair lands
         pair_site = tasks.origin[tasks.pair_task]
+        # pairs whose chunk is replicated at the requesting machine are
+        # satisfied by the session's hot-chunk directory: they never climb
+        # the forest, and their task (if primary) executes in place
+        if replicas is not None and replicas.hot_ids.size and tasks.nnz:
+            pair_local = replicas.holds(tasks.read_indices, pair_site)
+        else:
+            pair_local = np.zeros(tasks.nnz, dtype=bool)
 
         stores = _Stores()
         root_rows_key: np.ndarray = np.empty(0, dtype=np.int64)
@@ -135,7 +152,8 @@ class TDOrchEngine:
         cost.begin("phase1_contention_detection")
         if tasks.nnz:
             pair_site, root_rows_key, root_rows_cnt = self._phase1(
-                tasks, store, cost, stores, pair_site, sigma, C
+                tasks, store, cost, stores, pair_site, sigma, C,
+                climb=~pair_local,
             )
         cost.end()
         exec_site = tasks.origin.copy()
@@ -144,7 +162,9 @@ class TDOrchEngine:
         # ---------------- Phase 2: push-pull co-location -------------------
         cost.begin("phase2_push_pull")
         self._phase2_pull(store, cost, stores, B)
-        self._phase2_secondary(tasks, store, cost, pair_site, exec_site)
+        self._phase2_replica_local(tasks, store, cost, pair_local)
+        self._phase2_secondary(tasks, store, cost, pair_site, exec_site,
+                               replicas)
         cost.end()
 
         # ---------------- Phase 3: execution -------------------------------
@@ -163,12 +183,21 @@ class TDOrchEngine:
         # ---------------- Phase 4: write-backs -----------------------------
         cost.begin("phase4_write_back")
         if updates is not None:
-            self._phase4(tasks, store, cost, stores, exec_site, updates, merge)
+            self._phase4(tasks, store, cost, stores, exec_site, updates, merge,
+                         replicas)
         cost.end()
 
         refcount = {
             int(k): int(c) for k, c in zip(root_rows_key, root_rows_cnt) if c > 0
         }
+        # replica-local pairs are observed at their origin machine — the
+        # leaf-level half of contention detection — so the demand histogram
+        # keeps seeing the full per-chunk request stream
+        if pair_local.any():
+            lk, lc = np.unique(tasks.read_indices[pair_local],
+                               return_counts=True)
+            for k, c in zip(lk, lc):
+                refcount[int(k)] = refcount.get(int(k), 0) + int(c)
         return OrchestrationResult(
             results=results,
             report=cost.totals(),
@@ -177,7 +206,8 @@ class TDOrchEngine:
         )
 
     # ------------------------------------------------------------------
-    def _phase1(self, tasks, store, cost, stores, pair_site, sigma, C):
+    def _phase1(self, tasks, store, cost, stores, pair_site, sigma, C,
+                climb=None):
         """Climb the communication forest, merging meta-task sets (§3.1–3.2).
 
         Merging happens at the *leaf* machines first — a machine's own >C
@@ -187,26 +217,32 @@ class TDOrchEngine:
 
         Each (task, requested-key) pair is its own descriptor. Primary pairs
         carry the task context (σ + header words); secondary pairs of a
-        multi-get task are bare requests (header only).
+        multi-get task are bare requests (header only). `climb` masks the
+        pairs that enter the forest at all — replica-local pairs (served by
+        the session's hot-chunk directory) stay at their origin.
         """
         forest = self.forest
-        keys = tasks.read_indices
-        origin = tasks.origin[tasks.pair_task]
-        nnz = keys.shape[0]
+        nnz = tasks.read_indices.shape[0]
         is_primary = np.zeros(nnz, dtype=bool)
         has = tasks.arity > 0
         is_primary[tasks.read_indptr[:-1][has]] = True
+        sel = np.arange(nnz, dtype=np.int64) if climb is None \
+            else np.flatnonzero(climb)
+        if sel.size == 0:
+            return pair_site, np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
+        keys = tasks.read_indices[sel]
+        origin = tasks.origin[tasks.pair_task[sel]]
         tbl = {
             "key": keys.copy(),
             "hm": store.home[keys],  # tree root machine
             "node": forest.leaf_node(origin),
             "pm": origin.copy(),
-            "lvl": np.zeros(nnz, dtype=np.int64),
-            "cnt": np.ones(nnz, dtype=np.int64),
+            "lvl": np.zeros(sel.size, dtype=np.int64),
+            "cnt": np.ones(sel.size, dtype=np.int64),
             # L0 payload = pair index; L>=1 payload = store id
-            "pay": np.arange(nnz, dtype=np.int64),
+            "pay": sel,
             # words an L0 row costs to move (context rides the primary pair)
-            "w0": np.where(is_primary, sigma + _L0_HEADER, _L0_HEADER),
+            "w0": np.where(is_primary[sel], sigma + _L0_HEADER, _L0_HEADER),
         }
 
         # merge at leaves (round 0: no movement, purely local aggregation)
@@ -324,14 +360,31 @@ class TDOrchEngine:
         cost.work(machine, 1.0)
 
     # ------------------------------------------------------------------
-    def _phase2_secondary(self, tasks, store, cost, pair_site, exec_site):
+    def _phase2_replica_local(self, tasks, store, cost, pair_local):
+        """Serve replica-resident primary pairs from the local copy: the task
+        executes at its origin, the value is a local memory read — recorded
+        as replica-local words, never as wire traffic."""
+        if not pair_local.any():
+            return
+        is_primary = np.zeros(tasks.nnz, dtype=bool)
+        has = tasks.arity > 0
+        is_primary[tasks.read_indptr[:-1][has]] = True
+        prim = pair_local & is_primary
+        if prim.any():
+            cost.local(tasks.origin[tasks.pair_task[prim]], store.value_width)
+
+    # ------------------------------------------------------------------
+    def _phase2_secondary(self, tasks, store, cost, pair_site, exec_site,
+                          replicas=None):
         """Forward secondary-pair values to their task's execution site.
 
         A multi-get task executes where its primary pair landed; each of its
         other requested values — now resident at the pair's co-location site
         (a parked transit machine with a chunk copy, or the chunk's home) —
-        is forwarded there as a (key, value) row. Arity-1 batches have no
-        secondary pairs, so this is free and round-less for them.
+        is forwarded there as a (key, value) row. Chunks replicated at the
+        execution site itself are read there directly (replica-local words,
+        no forwarding). Arity-1 batches have no secondary pairs, so this is
+        free and round-less for them.
         """
         if tasks.max_arity <= 1:
             return
@@ -342,14 +395,24 @@ class TDOrchEngine:
         if sec.size == 0:
             return
         dst = exec_site[tasks.pair_task[sec]]
+        if replicas is not None and replicas.hot_ids.size:
+            loc = replicas.holds(tasks.read_indices[sec], dst)
+            if loc.any():
+                cost.local(dst[loc], store.value_width)
+                sec, dst = sec[~loc], dst[~loc]
+                if sec.size == 0:
+                    return
         cost.send(pair_site[sec], dst, store.value_width + 1)
         cost.work(pair_site[sec], 1.0)
         cost.tick()
 
     # ------------------------------------------------------------------
-    def _phase4(self, tasks, store, cost, stores, exec_site, updates, merge):
+    def _phase4(self, tasks, store, cost, stores, exec_site, updates, merge,
+                replicas=None):
         """Merge-able write-backs (§3.4). In-tree writes climb the reverse
-        meta-task tree; cross-key writes ride the destination forest."""
+        meta-task tree; cross-key writes ride the destination forest.
+        Written chunks that are replicated get their ⊗-combined update
+        write-through-propagated from home to every other holder."""
         updates = np.atleast_2d(np.asarray(updates))
         if updates.shape[0] != tasks.n:
             updates = updates.T
@@ -381,6 +444,11 @@ class TDOrchEngine:
             self._forest_scatter_reduce(
                 tasks.write_keys[cross], exec_site[cross], store, cost, w_u
             )
+
+        # --- replica maintenance: home → holders, one combined row each
+        if replicas is not None:
+            charge_write_through(cost, store.home, replicas,
+                                 tasks.write_keys[writes], w_u)
 
         # --- numeric application (single authoritative ⊙ per chunk, shared)
         apply_writes(tasks, store, updates, merge, cost)

@@ -22,21 +22,35 @@ from typing import Callable, Dict, Optional
 
 import numpy as np
 
-from .cost import SessionReport
+from .cost import SessionReport, StageReport
 from .datastore import DataStore, TaskBatch
 from .engine import OrchestrationResult
 from .mergeops import MergeOp
 from .registry import make_engine
+from .replication import make_replicator
 
 
 class Orchestrator:
-    """A long-lived scheduling session over one store and one engine."""
+    """A long-lived scheduling session over one store and one engine.
 
-    def __init__(self, store: DataStore, engine: str = "tdorch", **engine_opts):
+    `replication=` turns on the session-owned hot-chunk subsystem
+    (`core.replication`): pass True for defaults, a dict / `ReplicationConfig`
+    for knobs, or an existing `HotChunkReplicator` to share state. The
+    session persists the demand histogram and replica directory across
+    stages — refreshing the electorate when due (charged as the separate
+    ``replica_refresh`` phase on that stage's report), handing the directory
+    to the engine, and folding each stage's Phase-1 refcounts back into the
+    histogram.
+    """
+
+    def __init__(self, store: DataStore, engine: str = "tdorch", *,
+                 replication=None, **engine_opts):
         self.store = store
         self.engine_name = engine if isinstance(engine, str) else type(engine).__name__
         self.engine = (make_engine(engine, store.P, **engine_opts)
                        if isinstance(engine, str) else engine)
+        self.replicator = make_replicator(replication, store.home, store.P,
+                                          store.chunk_words)
         self._report = SessionReport(store.P)
 
     # ------------------------------------------------------------------
@@ -58,6 +72,11 @@ class Orchestrator:
     def num_stages(self) -> int:
         return self._report.num_stages
 
+    @property
+    def replicas(self):
+        """The session's current replica directory (None if replication off)."""
+        return self.replicator.replicas if self.replicator is not None else None
+
     # ------------------------------------------------------------------
     def run_stage(
         self,
@@ -69,8 +88,28 @@ class Orchestrator:
     ) -> OrchestrationResult:
         """Run one orchestration stage against the session's store and fold
         its cost report into the session report."""
+        extra: Dict[str, object] = {}
+        ref_report: Optional[StageReport] = None
+        if self.replicator is not None:
+            ref_report = self.replicator.maybe_refresh()
+            extra["replicas"] = self.replicator.replicas
         res = self.engine.run_stage(tasks, self.store, f, write_back=write_back,
-                                    return_results=return_results)
+                                    return_results=return_results, **extra)
+        if self.replicator is not None:
+            # feed the demand histogram: Phase-1 meta-task counts when the
+            # engine reports them (tdorch), the batch's requested keys as
+            # the equivalent fallback for engines without contention
+            # detection (same totals — refcounts sum to nnz)
+            if res.refcount:
+                self.replicator.observe(res.refcount)
+            else:
+                self.replicator.observe_keys(tasks.read_indices)
+        if ref_report is not None:
+            # the refresh broadcast belongs to this stage's bill, as its own
+            # phase — phase_totals() and the SessionReport refresh/steady
+            # split keep it separable
+            res.report = StageReport(res.report.P,
+                                     ref_report.phases + res.report.phases)
         self._report.add(res.report)
         return res
 

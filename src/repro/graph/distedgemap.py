@@ -20,6 +20,12 @@ The source-tree machinery (per-member parent maps over the C-ary trees) is
 session state: rounds driven through a `GraphSession` reuse the session's
 precomputed `TreeCharger`; direct calls borrow the graph's cached default
 session instead of rebuilding the layout per call.
+
+Hot-vertex replication (`replicate=`, session-owned, cost-model only): the
+session's `HotChunkReplicator` learns per-round vertex demand and keeps the
+hottest vertices' values resident on every machine — their source-value
+propagation becomes machine-local reads, and only *changed* values are
+write-through-propagated back to holders. Numerics are unaffected.
 """
 from __future__ import annotations
 
@@ -30,6 +36,7 @@ import numpy as np
 
 from ..core.cost import CostAccumulator, StageReport
 from ..core.mergeops import get_merge_op
+from ..core.replication import charge_write_through
 from .partition import OrchestratedGraph
 from .session import VALUE_WORDS, TreeCharger, _expand_csr, session_for
 from .vertex_subset import DistVertexSubset
@@ -58,12 +65,31 @@ def dist_edge_map(
     fast_local: bool = True,  # T2: work-efficient local combine
     per_edge_comm: bool = False,  # Ligra-Dist baseline: naive RDMA per edge
     threshold_frac: float = 1 / 20,  # Ligra direction heuristic
+    replicate=None,  # hot-vertex replication: None = session's setting,
+    #                  True/dict/config = opt this session in, False = off
 ) -> tuple[DistVertexSubset, EdgeMapStats]:
     g = og.graph
     merge = get_merge_op(merge_value)
     sess = session if session is not None else session_for(og)
     idx = U.indices
     sum_deg = U.sum_degrees(og.out_indptr)
+
+    # ---- adaptive hot-vertex replication (session state, cost-model only):
+    # per_edge_comm is the no-orchestration ablation, so it never replicates.
+    # replicate=None inherits the replicator only from an EXPLICITLY passed
+    # session — a direct call borrowing the graph's cached default session
+    # must opt in per call, so one replicate=True call can never silently
+    # turn replication on for later default calls on the same graph.
+    rep = None
+    if account and not per_edge_comm:
+        if replicate is None and session is not None:
+            rep = getattr(sess, "replicator", None)
+        elif replicate is not None and replicate is not False:
+            rep = sess.ensure_replicator(replicate)
+    ref_report = rep.maybe_refresh() if rep is not None else None
+    replicas = rep.replicas if rep is not None else None
+    if replicas is not None and not replicas.hot_ids.size:
+        replicas = None
 
     # ---- mode selection (§5.1): sparse for small frontiers ---------------
     if force_mode is not None:
@@ -101,14 +127,30 @@ def dist_edge_map(
         cost.work(og.vertex_home[d], 1.0)
         cost.tick(2)
     elif cost is not None and idx.size:
+        # replicated sources: every machine holding their out-edges already
+        # has the value — a machine-local read, no tree/broadcast traffic
+        live = idx
+        if replicas is not None and mode in ("sparse", "dense"):
+            # a vertex counts as replicated only when EVERY machine holds it
+            # (conservative under a partial holders bitmap: any gap falls
+            # back to the full tree broadcast)
+            slot = replicas.lookup[idx]
+            hot = slot >= 0
+            hot[hot] = replicas.holders[slot[hot]].all(axis=1)
+            if hot.any() and (dedup or mode == "sparse"):
+                flat_h, _ = _expand_csr(og.src_grp_indptr, idx[hot])
+                cost.local(og.src_grp_machines[flat_h], VALUE_WORDS)
+                live = idx[~hot]
         if mode == "sparse":
-            h = sess.src_charger.charge(cost, idx, VALUE_WORDS, upward=False)
+            h = (sess.src_charger.charge(cost, live, VALUE_WORDS, upward=False)
+                 if live.size else 0)
             cost.tick(max(h, 1))
         else:
             if dedup:
                 # T1 destination-aware broadcast: value -> only machines
                 # holding that vertex's out-edges, one copy each
-                sess.src_charger.direct_broadcast(cost, idx, VALUE_WORDS)
+                if live.size:
+                    sess.src_charger.direct_broadcast(cost, live, VALUE_WORDS)
             else:
                 # naive dense: broadcast every active value to all machines
                 allm = np.arange(og.P, dtype=np.int64)
@@ -159,12 +201,29 @@ def dist_edge_map(
     if uniq_d.size:
         changed = np.asarray(write_back(uniq_d, combined[:, 0]), dtype=bool)
         nxt = DistVertexSubset(og.n, indices=uniq_d[changed])
+        # replicated destinations whose value actually changed: home
+        # write-through-propagates the new value to every holder, keeping
+        # replicas fresh (unchanged homes need no propagation)
+        if cost is not None and replicas is not None and not per_edge_comm:
+            charge_write_through(cost, og.vertex_home, replicas,
+                                 uniq_d[changed], VALUE_WORDS)
     else:
         nxt = DistVertexSubset.empty(og.n)
+
+    if rep is not None:
+        # demand feed: a vertex is "requested" once per machine that needs
+        # its value this round (its source-tree member count)
+        rep.observe_keys(idx, weights=(og.src_grp_indptr[idx + 1]
+                                       - og.src_grp_indptr[idx]
+                                       ).astype(np.float64))
 
     report = None
     if cost is not None:
         cost.end()
         report = cost.totals()
+        if ref_report is not None:
+            # the refresh broadcast is part of this round's bill, kept as
+            # its own `replica_refresh` phase for the session-level split
+            report = StageReport(og.P, ref_report.phases + report.phases)
     return nxt, EdgeMapStats(mode=mode, active_vertices=idx.size,
                              active_edges=int(edge_ids.size), report=report)

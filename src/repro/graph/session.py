@@ -25,6 +25,7 @@ from typing import List, Tuple
 import numpy as np
 
 from ..core.cost import CostAccumulator, SessionReport
+from ..core.replication import make_replicator
 
 VALUE_WORDS = 2  # one vertex value + vertex id per message
 
@@ -98,15 +99,26 @@ class TreeCharger:
 
 @dataclasses.dataclass
 class GraphSession:
-    """A long-lived DistEdgeMap session over one orchestrated graph."""
+    """A long-lived DistEdgeMap session over one orchestrated graph.
+
+    `replication=` opts rounds driven through this session into adaptive
+    hot-vertex replication (`repro.core.replication`): the session learns
+    per-vertex demand — weighted by how many machines need the value each
+    round — and keeps the hottest vertices' values resident everywhere, so
+    their source-tree broadcasts become machine-local reads. Write-backs
+    still ⊗-combine to the vertex home, then write-through to holders.
+    """
 
     og: "OrchestratedGraph"  # noqa: F821 — forward ref, avoids import cycle
     defaults: dict = dataclasses.field(default_factory=dict)
+    replication: object = None  # None | True | dict | ReplicationConfig
 
     def __post_init__(self):
         og = self.og
         self.src_charger = TreeCharger(og.vertex_home, og.src_grp_indptr,
                                        og.src_grp_machines, og.C)
+        self.replicator = make_replicator(self.replication, og.vertex_home,
+                                          og.P, VALUE_WORDS)
         self._report = SessionReport(og.P)
         self.stats: List = []
 
@@ -127,6 +139,16 @@ class GraphSession:
     @property
     def num_rounds(self) -> int:
         return len(self.stats)
+
+    def ensure_replicator(self, spec=True):
+        """Create the session's replicator on first use (for
+        `dist_edge_map(..., replicate=...)` opt-in on a plain session).
+        The first spec wins: later calls reuse the existing replicator
+        (its learned histogram is the point) and ignore a differing spec."""
+        if self.replicator is None:
+            self.replicator = make_replicator(spec, self.og.vertex_home,
+                                              self.og.P, VALUE_WORDS)
+        return self.replicator
 
     # ------------------------------------------------------------------
     def edge_map(self, U, f, write_back, merge_value: str = "min",

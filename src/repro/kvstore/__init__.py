@@ -2,9 +2,11 @@
 # built directly on the task-data orchestration interface, plus the YCSB
 # workload generators (A/B/C/LOAD with Zipf-distributed key access).
 from .hashtable import DistributedHashTable, KVResult, MultiGetResult
-from .ycsb import YCSB_WORKLOADS, YCSBWorkload, make_ycsb_batch, zipf_keys
+from .ycsb import (YCSB_WORKLOADS, YCSBWorkload, make_ycsb_batch,
+                   make_ycsb_stream, zipf_keys, zipf_keys_stationary)
 
 __all__ = [
     "DistributedHashTable", "KVResult", "MultiGetResult",
-    "YCSB_WORKLOADS", "YCSBWorkload", "make_ycsb_batch", "zipf_keys",
+    "YCSB_WORKLOADS", "YCSBWorkload", "make_ycsb_batch",
+    "make_ycsb_stream", "zipf_keys", "zipf_keys_stationary",
 ]

@@ -21,8 +21,19 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core import (DataStore, OrchestrationResult, Orchestrator, SessionReport,
-                    TaskBatch)
+from ..core import (DataStore, OrchestrationResult, Orchestrator,
+                    ReplicationConfig, SessionReport, TaskBatch)
+
+
+def _replication_sig(replicate):
+    """Hashable session-cache key for a `replicate=` spec."""
+    if replicate is None or replicate is False:
+        return None
+    if isinstance(replicate, dict):
+        return tuple(sorted(replicate.items()))
+    if isinstance(replicate, ReplicationConfig):
+        return replicate
+    return id(replicate) if not isinstance(replicate, bool) else True
 
 
 @dataclasses.dataclass
@@ -69,21 +80,31 @@ class DistributedHashTable:
         self.store.values[np.asarray(keys, dtype=np.int64)] = values
 
     # ---- sessions ----------------------------------------------------------
-    def session(self, engine: str = "tdorch", **engine_opts) -> Orchestrator:
+    def session(self, engine: str = "tdorch", replicate=None,
+                **engine_opts) -> Orchestrator:
         """The table's cached long-lived session for `engine` (+opts): the
         engine and its CommForest are constructed once, then reused by every
-        batch routed through it."""
-        sig = (engine, tuple(sorted(engine_opts.items())))
+        batch routed through it.
+
+        `replicate=` opts the session into adaptive hot-chunk replication
+        (True / dict of `ReplicationConfig` knobs): the session learns the
+        key-demand histogram across batches and keeps the hottest chunks
+        replicated on every machine — subsequent batches read them locally.
+        """
+        sig = (engine, _replication_sig(replicate),
+               tuple(sorted(engine_opts.items())))
         sess = self._sessions.get(sig)
         if sess is None:
             sess = self._sessions[sig] = Orchestrator(
-                self.store, engine=engine, **engine_opts)
+                self.store, engine=engine, replication=replicate or None,
+                **engine_opts)
         return sess
 
-    def session_report(self, engine: str = "tdorch", **engine_opts) -> SessionReport:
+    def session_report(self, engine: str = "tdorch", replicate=None,
+                       **engine_opts) -> SessionReport:
         """Accumulated cross-batch costs for the session keyed by `engine`
         (+the same opts the batches were run with)."""
-        return self.session(engine, **engine_opts).report
+        return self.session(engine, replicate=replicate, **engine_opts).report
 
     # ---- single-key batches ------------------------------------------------
     def execute_batch(
@@ -94,10 +115,12 @@ class DistributedHashTable:
         *,
         engine: str = "tdorch",
         origin: Optional[np.ndarray] = None,
+        replicate=None,
         **engine_opts,
     ) -> KVResult:
         """Run one YCSB-style batch: GETs return values; UPDATEs write
-        multiply-and-add results back."""
+        multiply-and-add results back. `replicate=` routes the batch through
+        the table's replicating session for this engine (see `session`)."""
         n = keys.shape[0]
         keys = np.asarray(keys, dtype=np.int64)
         is_read = np.asarray(is_read, dtype=bool)
@@ -120,9 +143,9 @@ class DistributedHashTable:
             updated = in_vals * mul + add  # the §4 multiply-and-add lambda
             return {"update": updated, "result": in_vals}
 
-        res: OrchestrationResult = self.session(engine, **engine_opts).run_stage(
-            tasks, f, write_back="write", return_results=True
-        )
+        res: OrchestrationResult = self.session(
+            engine, replicate=replicate, **engine_opts
+        ).run_stage(tasks, f, write_back="write", return_results=True)
         return KVResult(values=res.results, report=res.report, refcount=res.refcount)
 
     # ---- multi-get batches -------------------------------------------------
@@ -132,6 +155,7 @@ class DistributedHashTable:
         *,
         engine: str = "tdorch",
         origin: Optional[np.ndarray] = None,
+        replicate=None,
         **engine_opts,
     ) -> MultiGetResult:
         """One ragged multi-get batch: task i fetches every key in
@@ -164,7 +188,7 @@ class DistributedHashTable:
             flat = vals.reshape(n, -1) if vals.ndim == 3 else vals
             return {"result": flat}
 
-        res = self.session(engine, **engine_opts).run_stage(
+        res = self.session(engine, replicate=replicate, **engine_opts).run_stage(
             tasks, f, write_back="add", return_results=True
         )
         values = res.results.reshape(n, A, w) if A > 1 else res.results[:, None, :]

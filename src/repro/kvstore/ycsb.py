@@ -39,6 +39,25 @@ def zipf_keys(
     return perm[raw].astype(np.int64)
 
 
+def zipf_keys_stationary(
+    n: int, num_keys: int, gamma: float, rng: np.random.Generator,
+    perm: np.ndarray,
+) -> np.ndarray:
+    """Sample n keys from Zipf(γ) under a FIXED rank→identity permutation.
+
+    `zipf_keys` redraws the permutation per call, so two batches share no
+    hot keys — an adversarial nonstationary stream. Multi-stage hot-spot
+    workloads (the regime adaptive replication targets) keep the same
+    popular identities batch after batch; pass one `perm`
+    (`rng.permutation(num_keys)`) and sample every stage through it.
+    """
+    ranks = np.arange(1, num_keys + 1, dtype=np.float64)
+    p = ranks ** (-gamma)
+    p /= p.sum()
+    raw = rng.choice(num_keys, size=n, p=p)
+    return np.asarray(perm, dtype=np.int64)[raw]
+
+
 def make_ycsb_batch(
     workload: str | YCSBWorkload,
     tasks_per_machine: int,
@@ -60,3 +79,28 @@ def make_ycsb_batch(
     is_read = rng.random(n) < workload.read_fraction
     operand = rng.random((n, 2))  # (multiplier, addend) for multiply-and-add
     return keys, is_read, operand
+
+
+def make_ycsb_stream(
+    workload: str | YCSBWorkload,
+    tasks_per_machine: int,
+    num_machines: int,
+    num_keys: int,
+    gamma: float = 1.5,
+    seed: int = 0,
+    stages: int = 1,
+):
+    """A multi-stage YCSB stream with a *stationary* hot set: one Zipf
+    rank→identity permutation shared by every stage (what a session-level
+    replicator can learn), fresh operation draws per stage. Yields
+    `(keys, is_read, operand)` per stage; deterministic in `seed`."""
+    if isinstance(workload, str):
+        workload = YCSB_WORKLOADS[workload.upper()]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(num_keys)
+    n = tasks_per_machine * num_machines
+    for _ in range(stages):
+        keys = zipf_keys_stationary(n, num_keys, gamma, rng, perm)
+        is_read = rng.random(n) < workload.read_fraction
+        operand = rng.random((n, 2))
+        yield keys, is_read, operand

@@ -1,0 +1,358 @@
+"""Adaptive hot-chunk replication (core/replication.py).
+
+Covers the PR's acceptance surface:
+  * replica reads are bit-identical to unreplicated runs — arity-1 AND
+    ragged multi-get batches, all four registered engines, multi-stage;
+  * the histogram decay / re-election cycle is deterministic under a fixed
+    seed, and decay actually halves the demand memory;
+  * SessionReport separates replica-refresh words from steady-state words
+    (and counts replica-local words that never touch the wire);
+  * replication lowers tdorch steady-state words under stationary Zipf
+    skew, and elects nothing on a uniform workload (min_count threshold);
+  * replication off (the default) charges word-for-word what PR 1 charged;
+  * the graph side: hot-vertex replication keeps DistEdgeMap numerics
+    identical while refresh traffic is accounted on the session.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DataStore,
+    HotChunkReplicator,
+    Orchestrator,
+    ReplicaSet,
+    ReplicationConfig,
+    TaskBatch,
+)
+from repro.core.cost import REPLICA_REFRESH_PHASE
+from repro.kvstore import DistributedHashTable, make_ycsb_stream
+
+ENGINE_NAMES = ["tdorch", "push", "pull", "sort"]
+REP = {"num_hot": 16, "refresh": 2, "decay": 0.5, "min_count": 2.0}
+
+
+def _zipf_stages(seed, n, nkeys, stages, gamma=1.8):
+    """Stationary skewed key stream (same hot identities every stage)."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(nkeys)
+    ranks = np.arange(1, nkeys + 1, dtype=np.float64) ** (-gamma)
+    p = ranks / ranks.sum()
+    return [perm[rng.choice(nkeys, size=n, p=p)].astype(np.int64)
+            for _ in range(stages)]
+
+
+# ---------------------------------------------------------------------------
+# ReplicaSet directory
+# ---------------------------------------------------------------------------
+class TestReplicaSet:
+    def test_empty_holds_nothing(self):
+        rs = ReplicaSet.empty(16, 4)
+        assert rs.num_replicated == 0
+        assert not rs.holds(np.arange(16), np.zeros(16, np.int64)).any()
+
+    def test_holds_respects_bitmap(self):
+        lookup = np.full(8, -1, dtype=np.int64)
+        lookup[3] = 0
+        holders = np.array([[True, False, True, False]])
+        rs = ReplicaSet(hot_ids=np.array([3]), lookup=lookup, holders=holders)
+        got = rs.holds(np.array([3, 3, 3, 5]), np.array([0, 1, 2, 0]))
+        assert got.tolist() == [True, False, True, False]
+
+
+# ---------------------------------------------------------------------------
+# bit-identical numerics, replication on vs off
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ENGINE_NAMES)
+def test_arity1_replica_runs_bit_identical(engine):
+    P, nkeys, n, stages = 8, 256, 3000, 5
+    key_stages = _zipf_stages(3, n, nkeys, stages)
+
+    def run(replication):
+        store = DataStore.create(nkeys, P, value_width=2, chunk_words=8)
+        store.values[:] = np.arange(2 * nkeys, dtype=np.float64).reshape(nkeys, 2)
+        sess = Orchestrator(store, engine=engine, replication=replication)
+        results = []
+        for keys in key_stages:
+            tasks = TaskBatch(contexts=np.ones((n, 1)), read_keys=keys,
+                              origin=TaskBatch.even_origins(n, P))
+            r = sess.run_stage(tasks, lambda c, v: {"update": v * 0.5,
+                                                    "result": v},
+                               write_back="write", return_results=True)
+            results.append(r.results.copy())
+        return store.values.copy(), results, sess
+
+    v_off, r_off, _ = run(None)
+    v_on, r_on, sess_on = run(dict(REP))
+    np.testing.assert_array_equal(v_off, v_on)
+    for a, b in zip(r_off, r_on):
+        np.testing.assert_array_equal(a, b)
+    # the skewed stream did elect and serve replicas (not a vacuous test)
+    assert sess_on.replicas.num_replicated > 0
+    assert sess_on.report.replica_local_words > 0
+
+
+@pytest.mark.parametrize("engine", ENGINE_NAMES)
+def test_ragged_replica_runs_bit_identical(engine):
+    """Multi-get batches: arity 0..3, intra-task duplicates, cross-key
+    writes — replication must not move a single output bit."""
+    P, nkeys, n, stages = 8, 128, 1200, 4
+    rng = np.random.default_rng(9)
+    stage_batches = []
+    for s in range(stages):
+        key_lists = []
+        hot = rng.integers(0, 8)  # a small hot set, stationary-ish
+        for _ in range(n):
+            a = int(rng.integers(0, 4))
+            ks = rng.integers(0, nkeys, a)
+            if a and rng.random() < 0.6:
+                ks[0] = hot
+            if a >= 2 and rng.random() < 0.3:
+                ks[1] = ks[0]
+            key_lists.append(ks.tolist())
+        stage_batches.append((key_lists, rng.integers(0, nkeys, n)))
+
+    def f(ctx, vals, mask):
+        red = (vals[..., 0] * mask).sum(axis=1, keepdims=True) \
+            if vals.ndim == 3 else vals[:, :1]
+        return {"update": red + 1.0, "result": red}
+
+    def run(replication):
+        store = DataStore.create(nkeys, P, value_width=1, chunk_words=8,
+                                 init=2.0)
+        sess = Orchestrator(store, engine=engine, replication=replication)
+        results = []
+        for key_lists, wk in stage_batches:
+            tasks = TaskBatch.from_ragged(np.zeros((n, 1)), key_lists,
+                                          TaskBatch.even_origins(n, P),
+                                          write_keys=wk)
+            r = sess.run_stage(tasks, f, write_back="add",
+                               return_results=True)
+            results.append(r.results.copy())
+        return store.values.copy(), results
+
+    v_off, r_off = run(None)
+    v_on, r_on = run(dict(REP, refresh=1))
+    np.testing.assert_array_equal(v_off, v_on)
+    for a, b in zip(r_off, r_on):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_replication_off_charges_identical_costs():
+    """replication=None (the default) must be word-for-word the PR 1 cost
+    path, not merely numerically equal."""
+    P, nkeys, n = 8, 64, 2000
+    rng = np.random.default_rng(5)
+    keys = rng.integers(0, nkeys, n)
+
+    def run(**kw):
+        store = DataStore.create(nkeys, P, value_width=1, chunk_words=8)
+        sess = Orchestrator(store, engine="tdorch", **kw)
+        tasks = TaskBatch(contexts=np.zeros((n, 2)), read_keys=keys,
+                          origin=TaskBatch.even_origins(n, P))
+        res = sess.run_stage(tasks, lambda c, v: {"update": v})
+        return [(p.name, p.rounds, p.sent.tolist(), p.recv.tolist(),
+                 p.compute.tolist(), p.local.tolist())
+                for p in res.report.phases]
+
+    assert run() == run(replication=None)
+
+
+# ---------------------------------------------------------------------------
+# deterministic decay / re-election
+# ---------------------------------------------------------------------------
+class TestElectionDeterminism:
+    def _drive(self, seed):
+        home = np.arange(32, dtype=np.int64) % 4
+        rep = HotChunkReplicator(home, 4, 8,
+                                 ReplicationConfig(num_hot=4, refresh=1,
+                                                   decay=0.5, min_count=1.0))
+        rng = np.random.default_rng(seed)
+        elections = []
+        for _ in range(6):
+            rep.maybe_refresh()
+            elections.append(sorted(rep.replicas.hot_ids.tolist()))
+            rep.observe_keys(rng.integers(0, 32, 500))
+        return elections, rep.counts.copy()
+
+    def test_same_seed_same_elections(self):
+        e1, c1 = self._drive(42)
+        e2, c2 = self._drive(42)
+        assert e1 == e2
+        np.testing.assert_array_equal(c1, c2)
+
+    def test_decay_halves_demand_memory(self):
+        rep = HotChunkReplicator(np.zeros(8, np.int64), 4, 8,
+                                 ReplicationConfig(num_hot=2, refresh=1,
+                                                   decay=0.5, min_count=1.0))
+        rep.observe(refcount={3: 100, 5: 8})
+        rep.refresh()
+        np.testing.assert_allclose(rep.counts[[3, 5]], [50.0, 4.0])
+        assert sorted(rep.replicas.hot_ids.tolist()) == [3, 5]
+
+    def test_shifted_hot_set_is_relearned(self):
+        rep = HotChunkReplicator(np.zeros(64, np.int64), 4, 8,
+                                 ReplicationConfig(num_hot=1, refresh=1,
+                                                   decay=0.25, min_count=1.0))
+        rep.observe(refcount={7: 1000})
+        rep.maybe_refresh()
+        assert rep.replicas.hot_ids.tolist() == [7]
+        for _ in range(4):  # demand moves to chunk 41; decay forgets 7
+            rep.observe(refcount={41: 1000})
+            rep.maybe_refresh()
+        assert rep.replicas.hot_ids.tolist() == [41]
+
+    def test_num_hot_larger_than_table_is_clamped(self):
+        """A tiny store with the default (large) electorate must elect at
+        most num_keys chunks, not crash in top-k."""
+        store = DataStore.create(8, 4, value_width=1, chunk_words=4)
+        sess = Orchestrator(store, engine="tdorch",
+                            replication={"num_hot": 64, "refresh": 1,
+                                         "min_count": 1.0})
+        for _ in range(3):
+            tasks = TaskBatch(contexts=np.zeros((40, 1)),
+                              read_keys=np.arange(40, dtype=np.int64) % 8,
+                              origin=TaskBatch.even_origins(40, 4))
+            sess.run_stage(tasks, lambda c, v: {"result": v},
+                           return_results=True)
+        assert 0 < sess.replicas.num_replicated <= 8
+
+    def test_min_count_blocks_uniform_election(self):
+        rep = HotChunkReplicator(np.zeros(1024, np.int64), 8, 8,
+                                 ReplicationConfig(num_hot=16, refresh=1,
+                                                   min_count=8.0))
+        rng = np.random.default_rng(0)
+        for _ in range(4):
+            rep.observe_keys(rng.integers(0, 1024, 512))  # ~0.5 per key
+            report = rep.maybe_refresh()
+        assert rep.replicas.num_replicated == 0
+        assert float(report.sent.sum()) == 0.0  # no refresh traffic either
+
+
+# ---------------------------------------------------------------------------
+# SessionReport: refresh vs steady vs replica-local accounting
+# ---------------------------------------------------------------------------
+def test_session_report_separates_refresh_from_steady_words():
+    P, nkeys, n, stages = 8, 256, 3000, 6
+    key_stages = _zipf_stages(11, n, nkeys, stages)
+
+    def run(replication):
+        store = DataStore.create(nkeys, P, value_width=1, chunk_words=8)
+        sess = Orchestrator(store, engine="tdorch", replication=replication)
+        for keys in key_stages:
+            tasks = TaskBatch(contexts=np.zeros((n, 1)), read_keys=keys,
+                              origin=TaskBatch.even_origins(n, P))
+            sess.run_stage(tasks, lambda c, v: {"result": v},
+                           return_results=True)
+        return sess.report
+
+    off, on = run(None), run(dict(REP))
+
+    # off: no refresh phase anywhere, steady == total
+    assert off.replica_refresh_words == 0.0
+    assert off.replica_local_words == 0.0
+    assert off.steady_state_words == float(off.sent.sum())
+    assert REPLICA_REFRESH_PHASE not in off.phase_totals()
+
+    # on: refresh phase present, split is exact, replicas absorbed reads
+    totals = on.phase_totals()
+    assert REPLICA_REFRESH_PHASE in totals
+    assert on.replica_refresh_words == totals[REPLICA_REFRESH_PHASE]["total_words"]
+    assert on.replica_refresh_words > 0.0
+    assert on.replica_local_words > 0.0
+    np.testing.assert_allclose(
+        on.steady_state_words + on.replica_refresh_words,
+        float(on.sent.sum()))
+    s = on.summary()
+    assert s["replica_refresh_words"] == on.replica_refresh_words
+    assert s["steady_state_words"] == on.steady_state_words
+
+    # ...and the point of it all: skewed steady-state traffic went DOWN
+    assert on.steady_state_words < off.steady_state_words
+
+
+def test_hashtable_replicate_option_reduces_words_under_skew():
+    P, nkeys, tpm, stages = 8, 16_000, 1_000, 5
+    cfg = {"num_hot": 32, "refresh": 2, "min_count": 4.0}
+    tables = {True: DistributedHashTable(nkeys, P, value_width=8),
+              False: DistributedHashTable(nkeys, P, value_width=8)}
+    for keys, is_read, operand in make_ycsb_stream(
+            "C", tpm, P, nkeys, gamma=1.5, seed=2, stages=stages):
+        for rep_on, ht in tables.items():
+            ht.execute_batch(keys, is_read, operand,
+                             replicate=cfg if rep_on else None)
+    np.testing.assert_array_equal(tables[True].values, tables[False].values)
+    on = tables[True].session_report("tdorch", replicate=cfg)
+    off = tables[False].session_report("tdorch")
+    assert float(on.sent.sum()) < float(off.sent.sum())
+    assert on.replica_local_words > 0
+
+
+# ---------------------------------------------------------------------------
+# graph side: hot-vertex replication
+# ---------------------------------------------------------------------------
+def test_graph_session_replication_identical_numerics():
+    from repro.graph import generators, partition
+    from repro.graph.session import GraphSession
+    from repro.graph.vertex_subset import DistVertexSubset
+
+    g = generators.star_graph(800)  # hub 0: the adversarial hot vertex
+    og = partition.ingest(g, 8, seed=0)
+
+    def run(replication):
+        sess = GraphSession(og, replication=replication)
+        vals = np.random.default_rng(1).random(og.n)
+        for _ in range(6):
+            U = DistVertexSubset(og.n,
+                                 indices=np.arange(og.n, dtype=np.int64))
+
+            def f(s, d, w):
+                return vals[s]
+
+            def wb(v, x):
+                old = vals[v].copy()
+                vals[v] = np.minimum(vals[v], x)
+                return vals[v] != old
+
+            sess.edge_map(U, f, wb, merge_value="min", force_mode="sparse")
+        return vals.copy(), sess
+
+    v_off, sess_off = run(None)
+    v_on, sess_on = run({"num_hot": 4, "refresh": 2, "min_count": 2.0})
+    np.testing.assert_array_equal(v_off, v_on)
+    assert sess_off.replicator is None
+    assert sess_on.replicator.num_elections > 0
+    assert 0 in sess_on.replicator.replicas.hot_ids  # the hub got elected
+    assert sess_on.report.replica_refresh_words > 0
+    assert sess_on.report.replica_local_words > 0
+    assert sess_off.report.replica_refresh_words == 0.0
+
+
+def test_direct_edge_map_replicate_does_not_stick_to_default_session():
+    """One dist_edge_map(..., replicate=True) call on a graph's borrowed
+    default session must not turn replication on for later replicate=None
+    calls (the cached default session is shared)."""
+    from repro.graph import generators, partition
+    from repro.graph.distedgemap import dist_edge_map
+    from repro.graph.vertex_subset import DistVertexSubset
+
+    og = partition.ingest(generators.star_graph(200), 4, seed=0)
+    vals = np.zeros(og.n)
+    U = DistVertexSubset(og.n, indices=np.arange(og.n, dtype=np.int64))
+
+    def f(s, d, w):
+        return vals[s] + 1
+
+    def wb(v, x):
+        return np.zeros(v.size, bool)
+
+    # opt in once, then call with the default again
+    for _ in range(3):
+        _, st = dist_edge_map(og, U, f, wb, merge_value="min",
+                              force_mode="sparse",
+                              replicate={"num_hot": 2, "refresh": 1,
+                                         "min_count": 1.0})
+    _, st_default = dist_edge_map(og, U, f, wb, merge_value="min",
+                                  force_mode="sparse")
+    names = [p.name for p in st_default.report.phases]
+    assert REPLICA_REFRESH_PHASE not in names
+    assert float(st_default.report.local.sum()) == 0.0
