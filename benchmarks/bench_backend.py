@@ -1,0 +1,128 @@
+"""Execution-backend shootout: numpy oracle vs jitted JAX, same engines.
+
+The tentpole claim under test: threading `backend="jax"` through an
+`Orchestrator` / `GraphSession` makes the *numeric* per-stage loop (padded
+gather → lambda → segment-⊗-combine → ⊙-apply, `repro.core.jaxexec`) faster
+than the float64 numpy reference, while per-phase words/rounds stay
+bit-identical (pinned separately by `tests/test_backend_parity.py`; here the
+words_per_task metric is emitted per backend so the regression gate notices
+if the backends ever diverge — the two rows of a cell must agree exactly).
+
+Workloads:
+  * YCSB-C (read-only serving) over Zipf keys through a long-lived
+    `DistributedHashTable` session per backend — the production shape: the
+    jitted session keeps the table device-resident across batches, and the
+    fused gather+lambda is where XLA beats the numpy oracle outright.
+    Compile + first upload happen in the timing warmup, as they would once
+    per serving process. (Write-heavy batches — YCSB A/B — are ⊙-apply
+    scatter-bound, which CPU XLA executes serially: they roughly break even
+    here and are covered by the parity tests instead; on TPU the
+    `repro.kernels.segment_combine` Pallas path is the remedy. The oracle
+    remains the right CPU backend for write-heavy *simulation*.)
+  * PageRank on a Barabási–Albert graph through `GraphSession(backend=...)`
+    with the cost model off (`account=False`) — the pure execution path a
+    device deployment runs, won via the cached routing permutation +
+    scatter-free prefix-sum combine — and once with it on, to show the
+    end-to-end simulator also benefits.
+
+Rows: ``backend/<workload>/<cell>/<backend>`` with ``wall_ms`` (+
+deterministic ``words_per_task`` where the cost model runs) and one
+``.../speedup`` summary row per cell: metrics ``speedup`` =
+numpy wall / jax wall (>1 = jitted wins).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph import generators
+from repro.graph.algorithms import pagerank
+from repro.graph.partition import ingest
+from repro.kvstore import DistributedHashTable, make_ycsb_batch
+
+from .common import row, timeit
+
+BACKENDS = ["numpy", "jax"]
+SEED = 17
+
+
+def _ycsb_cells(quick: bool):
+    tpm = 4_000 if quick else 20_000  # tasks per machine
+    P = 8
+    nkeys = 8 * tpm * P
+    stages = 3 if quick else 4
+    width = 16
+    for wl, gamma in [("C", 1.5), ("C", 2.0)]:
+        for engine in ["tdorch", "pull"]:
+            yield wl, gamma, engine, tpm, P, nkeys, stages, width
+
+
+def run(quick: bool = False):
+    rows = []
+
+    # ---------------- YCSB batches through hash-table sessions -------------
+    for wl, gamma, engine, tpm, P, nkeys, stages, width in _ycsb_cells(quick):
+        batches = [
+            make_ycsb_batch(wl, tpm, P, nkeys, gamma=gamma, seed=SEED + s)
+            for s in range(stages)
+        ]
+        cell = f"backend/ycsb/{wl}/zipf{gamma}/{engine}"
+        wall = {}
+        for backend in BACKENDS:
+            ht = DistributedHashTable(nkeys, P, value_width=width)
+
+            def call():
+                for keys, is_read, operand in batches:
+                    ht.execute_batch(keys, is_read, operand, engine=engine,
+                                     backend=backend)
+
+            wall[backend] = timeit(call, repeats=3, warmup=1)
+            ht.session(engine, backend=backend).reset_report()
+            call()
+            rep = ht.session_report(engine, backend=backend)
+            wpt = float(rep.sent.sum()) / (tpm * P * stages)
+            rows.append(row(
+                f"{cell}/{backend}", wall[backend] * 1e6,
+                f"words_per_task={wpt:.3f};stages={stages}",
+                seed=SEED, words_per_task=wpt,
+                wall_ms=wall[backend] * 1e3))
+        sp = wall["numpy"] / wall["jax"]
+        rows.append(row(f"{cell}/speedup", 0.0,
+                        f"{sp:.2f}x jitted vs numpy wall", seed=SEED,
+                        speedup=sp))
+
+    # ---------------- PageRank through GraphSession ------------------------
+    n = 20_000 if quick else 100_000
+    attach = 8
+    g = generators.barabasi_albert(n, attach, seed=SEED)
+    og = ingest(g, P=8)
+    for account in [False, True]:
+        tag = "exec" if not account else "sim"
+        cell = f"backend/pagerank/ba{n}/{tag}"
+        wall = {}
+        words = {}
+        for backend in BACKENDS:
+            def call():
+                return pagerank(og, max_iter=8, tol=0.0, backend=backend,
+                                account=account)
+
+            wall[backend] = timeit(call, repeats=3, warmup=1)
+            _, info = call()
+            words[backend] = (float(info.report.sent.sum()) / g.m
+                              if account else 0.0)
+            metrics = {"wall_ms": wall[backend] * 1e3}
+            if account:
+                metrics["words_per_edge"] = words[backend]
+            rows.append(row(
+                f"{cell}/{backend}", wall[backend] * 1e6,
+                f"8 iters;account={account}", seed=SEED, **metrics))
+        sp = wall["numpy"] / wall["jax"]
+        rows.append(row(f"{cell}/speedup", 0.0,
+                        f"{sp:.2f}x jitted vs numpy wall", seed=SEED,
+                        speedup=sp))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_csv
+
+    print_csv(run(quick=True))

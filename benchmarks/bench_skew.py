@@ -89,11 +89,13 @@ def run(quick: bool = False):
                         f"refresh={report.replica_refresh_words:.0f};"
                         f"steady={report.steady_state_words:.0f};"
                         f"local={report.replica_local_words:.0f};"
-                        f"imb={report.imbalance()['comm']:.2f}"))
+                        f"imb={report.imbalance()['comm']:.2f}",
+                        seed=17, words_per_task=wpt[rep_on]))
                 rows.append(row(
                     f"skew/{wl}/zipf{gamma}/{eng}/on_vs_off", 0.0,
                     f"{wpt[True] / wpt[False]:.4f}x words/task "
-                    f"(<1 = replication wins)"))
+                    f"(<1 = replication wins)",
+                    seed=17, words_ratio=wpt[True] / wpt[False]))
     return rows
 
 

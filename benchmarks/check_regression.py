@@ -1,0 +1,154 @@
+"""Benchmark-regression gate: diff freshly produced BENCH_*.json against the
+committed baselines and exit nonzero on regression.
+
+    python -m benchmarks.check_regression --baseline bench_out \\
+        --fresh bench_fresh [--suite ycsb ...]
+
+Comparison rules (schema v2, see `benchmarks/common.py`):
+
+* **Deterministic metrics** (words_per_task, words_per_edge, bsp_time,
+  simulated-cost ratios — everything not wall-clock): fixed seeds make
+  these bit-reproducible, so a fresh value worse than baseline by more than
+  ``--det-tol`` (default 2%) fails. Direction is by name: metrics ending in
+  ``_speedup`` (e.g. the ycsb ``bsp_speedup`` headline — a deterministic
+  simulated ratio) are higher-is-better; everything else lower-is-better.
+* **Wall-clock metrics** (``wall_ms``, ``*_wall``, and the bare ``speedup``
+  ratios of the backend suite): noisy across hosts — a CI runner is not the
+  machine the baseline was measured on. Raw wall times are informational
+  only; ``speedup`` ratios get a generous floor — fresh ≥
+  ``--wall-floor`` (default 0.25) × baseline, with the floor capped at 0.8
+  so a large committed win never demands a *win* on slower hardware, only
+  the absence of a collapse.
+* A baseline row missing from the fresh run fails (a silently dropped cell
+  is how regressions hide); fresh-only rows are informational.
+
+Files with mismatched ``schema`` or ``quick`` flags refuse to compare: a
+quick CI run must be diffed against a quick baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from .common import SCHEMA_VERSION
+
+DET_TOL = 0.02
+WALL_FLOOR = 0.25
+WALL_FLOOR_CAP = 0.8
+
+
+def _is_wall(metric: str) -> bool:
+    return metric == "wall_ms" or metric.endswith("_wall")
+
+
+def _is_wall_speedup(metric: str) -> bool:
+    # the bare wall-clock ratio of the backend suite ("speedup"); the
+    # *_speedup suffix is reserved for deterministic simulated ratios
+    return metric == "speedup" or metric.startswith("speedup_")
+
+
+def _is_det_speedup(metric: str) -> bool:
+    return metric.endswith("_speedup")
+
+
+def compare_suite(base: dict, fresh: dict, det_tol: float, wall_floor: float):
+    """Yields (severity, message) pairs; severity 'fail' gates."""
+    suite = base.get("suite", "?")
+    for field in ("schema", "quick"):
+        bv, fv = base.get(field), fresh.get(field)
+        if bv != fv:
+            yield "fail", (f"{suite}: {field} mismatch (baseline={bv!r}, "
+                           f"fresh={fv!r}) — regenerate the baseline")
+            return
+    fresh_rows = {r["name"]: r for r in fresh.get("rows", [])}
+    for brow in base.get("rows", []):
+        name = brow["name"]
+        frow = fresh_rows.get(name)
+        if frow is None:
+            yield "fail", f"{suite}: baseline row {name!r} missing from fresh run"
+            continue
+        for metric, bval in (brow.get("metrics") or {}).items():
+            fval = (frow.get("metrics") or {}).get(metric)
+            if fval is None:
+                yield "fail", f"{suite}: {name}: metric {metric!r} disappeared"
+                continue
+            if _is_wall_speedup(metric):
+                floor = min(bval * wall_floor, WALL_FLOOR_CAP)
+                if fval < floor:
+                    yield "fail", (f"{suite}: {name}: {metric} {fval:.3f} < "
+                                   f"floor {floor:.3f} ({wall_floor}x of "
+                                   f"baseline {bval:.3f}, capped)")
+                continue
+            if _is_wall(metric):
+                continue  # informational only — raw wall times are not gated
+            # deterministic metric: direction by name
+            if _is_det_speedup(metric):
+                worse, better = fval < bval * (1 - det_tol), \
+                    fval > bval * (1 + det_tol)
+            else:
+                worse, better = fval > bval * (1 + det_tol), \
+                    fval < bval * (1 - det_tol)
+            if worse:
+                yield "fail", (f"{suite}: {name}: {metric} regressed "
+                               f"{bval:.4f} -> {fval:.4f} (> {det_tol:.0%})")
+            elif better:
+                # deterministic metric *improved* beyond tolerance: the
+                # baseline is stale — surface it so it gets recommitted
+                yield "warn", (f"{suite}: {name}: {metric} improved "
+                               f"{bval:.4f} -> {fval:.4f}; recommit baseline")
+    for name in fresh_rows.keys() - {r["name"] for r in base.get("rows", [])}:
+        yield "info", f"{suite}: new row {name!r} (not in baseline)"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="bench_out",
+                    help="directory of committed BENCH_*.json baselines")
+    ap.add_argument("--fresh", default="bench_fresh",
+                    help="directory of freshly produced BENCH_*.json")
+    ap.add_argument("--suite", action="append", default=None,
+                    help="restrict to suite(s); default: every baseline file")
+    ap.add_argument("--det-tol", type=float, default=DET_TOL)
+    ap.add_argument("--wall-floor", type=float, default=WALL_FLOOR)
+    args = ap.parse_args(argv)
+
+    paths = sorted(glob.glob(os.path.join(args.baseline, "BENCH_*.json")))
+    if args.suite:
+        want = set(args.suite)
+        paths = [p for p in paths
+                 if os.path.basename(p)[len("BENCH_"):-len(".json")] in want]
+    if not paths:
+        print(f"no baselines matched under {args.baseline!r}", file=sys.stderr)
+        return 2
+
+    failed = False
+    for bpath in paths:
+        with open(bpath) as fh:
+            base = json.load(fh)
+        if base.get("schema") != SCHEMA_VERSION:
+            print(f"SKIP {bpath}: baseline schema {base.get('schema')!r} != "
+                  f"{SCHEMA_VERSION} (pre-gate file; recommit to enroll)")
+            continue
+        fpath = os.path.join(args.fresh, os.path.basename(bpath))
+        if not os.path.exists(fpath):
+            print(f"FAIL {bpath}: no fresh counterpart at {fpath}")
+            failed = True
+            continue
+        with open(fpath) as fh:
+            fresh = json.load(fh)
+        n_checked = 0
+        for severity, msg in compare_suite(base, fresh, args.det_tol,
+                                           args.wall_floor):
+            print(f"{severity.upper()} {msg}")
+            failed |= severity == "fail"
+            n_checked += 1
+        tail = f"compared ({n_checked} findings)" if n_checked else "clean"
+        print(f"ok {os.path.basename(bpath)}: {tail}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

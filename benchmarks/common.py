@@ -1,10 +1,32 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+Row schema (v2): every row is ``{"name", "us_per_call", "derived"}`` plus an
+optional ``"metrics"`` dict of *named floats* and the ``"seed"`` the cell was
+generated with. `derived` stays the human-readable free-text summary;
+`metrics` is the machine-readable face the regression gate
+(`benchmarks/check_regression.py`) diffs:
+
+* ``wall_ms``/``*_wall`` and the bare ``speedup`` ratio are wall-clock
+  quantities — noisy across hosts, gated only by a capped floor;
+* every other metric (words/task, BSP time, ``*_speedup`` simulated ratios)
+  is a **deterministic** function of the fixed seeds, compared with a tight
+  tolerance in its name-implied direction — a words-per-task regression
+  fails CI.
+
+Suites emit fixed seeds per cell so a rerun of the same code produces
+bit-identical deterministic metrics (the `--json` files are regression-
+diffable, not just human-comparable).
+"""
 from __future__ import annotations
 
 import json
 import os
 import time
 from typing import Callable, Dict, List
+
+# bump when the row/file layout changes incompatibly; the regression gate
+# refuses to compare files with mismatched schemas
+SCHEMA_VERSION = 2
 
 
 def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
@@ -20,8 +42,14 @@ def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
     return times[len(times) // 2]
 
 
-def row(name: str, us_per_call: float, derived: str) -> Dict:
-    return {"name": name, "us_per_call": us_per_call, "derived": derived}
+def row(name: str, us_per_call: float, derived: str, *, seed: int | None = None,
+        **metrics: float) -> Dict:
+    r: Dict = {"name": name, "us_per_call": us_per_call, "derived": derived}
+    if seed is not None:
+        r["seed"] = int(seed)
+    if metrics:
+        r["metrics"] = {k: float(v) for k, v in sorted(metrics.items())}
+    return r
 
 
 def print_csv(rows: List[Dict]) -> None:
@@ -30,13 +58,17 @@ def print_csv(rows: List[Dict]) -> None:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
 
 
-def write_json(path: str, suite: str, rows: List[Dict]) -> str:
+def write_json(path: str, suite: str, rows: List[Dict],
+               quick: bool | None = None) -> str:
     """Write one suite's rows as BENCH_<suite>.json under `path` (a
     directory, created if needed) so the perf trajectory is machine-readable
-    across PRs."""
+    across PRs and the regression gate can diff fresh runs against it."""
     os.makedirs(path, exist_ok=True)
     out = os.path.join(path, f"BENCH_{suite}.json")
+    payload: Dict = {"schema": SCHEMA_VERSION, "suite": suite, "rows": rows}
+    if quick is not None:
+        payload["quick"] = bool(quick)
     with open(out, "w") as fh:
-        json.dump({"suite": suite, "rows": rows}, fh, indent=1, sort_keys=True)
+        json.dump(payload, fh, indent=1, sort_keys=True)
         fh.write("\n")
     return out

@@ -6,10 +6,14 @@
     Fig. 10  bench_breakdown  comm/compute/sync breakdown
     Tab. 3/4 bench_ablation   no-TD-Orch + T1/T2/T3 ablations
     (beyond) bench_skew       adaptive hot-chunk replication on vs off
+    (beyond) bench_backend    numpy-oracle vs jitted-jax execution backend
     (beyond) bench_moe        TD-Orch vs push/pull as the MoE dispatcher
     (beyond) bench_kernels    per-kernel microbenchmarks
 
 Prints ``name,us_per_call,derived`` CSV. `--quick` shrinks sizes ~10×.
+`--json PATH` writes schema-versioned per-suite row files (fixed seeds, so
+deterministic metrics are rerun-stable and regression-diffable — see
+`benchmarks/check_regression.py`).
 """
 from __future__ import annotations
 
@@ -17,13 +21,15 @@ import argparse
 import sys
 import time
 
-from . import (bench_ablation, bench_breakdown, bench_graph, bench_kernels,
-               bench_moe, bench_scaling, bench_skew, bench_ycsb)
+from . import (bench_ablation, bench_backend, bench_breakdown, bench_graph,
+               bench_kernels, bench_moe, bench_scaling, bench_skew,
+               bench_ycsb)
 from .common import print_csv, write_json
 
 SUITES = {
     "ycsb": bench_ycsb,
     "skew": bench_skew,
+    "backend": bench_backend,
     "graph": bench_graph,
     "scaling": bench_scaling,
     "breakdown": bench_breakdown,
@@ -47,7 +53,7 @@ def main() -> None:
         suite_rows = SUITES[name].run(quick=args.quick)
         rows += suite_rows
         if args.json:
-            out = write_json(args.json, name, suite_rows)
+            out = write_json(args.json, name, suite_rows, quick=args.quick)
             print(f"# wrote {out}", file=sys.stderr)
         print(f"# suite {name} done in {time.time() - t0:.1f}s",
               file=sys.stderr)

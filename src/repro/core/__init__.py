@@ -3,8 +3,10 @@
 # push-pull + merge-able write-backs — plus the §2.3 baselines, reusable
 # Orchestrator sessions with a pluggable engine registry, and the SPMD
 # (shard_map) production realization used by the LM stack.
+from .backend import JaxBackend, NumpyBackend, make_backend
 from .comm_forest import CommForest, theory_fanout
-from .cost import CostAccumulator, PhaseCost, SessionReport, StageReport
+from .cost import (CostAccumulator, PhaseCost, SessionReport, StageReport,
+                   assert_cost_parity)
 from .datastore import DataStore, TaskBatch
 from .engine import OrchestrationResult, TDOrchEngine
 from .baselines import DirectPullEngine, DirectPushEngine, SortBasedEngine
@@ -16,8 +18,10 @@ from .replication import (HotChunkReplicator, ReplicaSet, ReplicationConfig,
 from .session import Orchestrator
 
 __all__ = [
+    "JaxBackend", "NumpyBackend", "make_backend",
     "CommForest", "theory_fanout",
     "CostAccumulator", "PhaseCost", "SessionReport", "StageReport",
+    "assert_cost_parity",
     "DataStore", "TaskBatch",
     "OrchestrationResult", "TDOrchEngine",
     "DirectPullEngine", "DirectPushEngine", "SortBasedEngine",

@@ -1,0 +1,333 @@
+"""Pluggable numeric execution backends: numpy-as-oracle vs jitted JAX.
+
+The simulation-fidelity contract (`core/engine.py`) already splits every
+stage into *numerics* (one vectorized gather → lambda → ⊗-combine → ⊙-apply
+pass shared by all engines) and *cost* (the forest walk that charges
+words/rounds). This module makes the numeric half pluggable:
+
+* `NumpyBackend` — the reference oracle. Exactly the pure-numpy pass in
+  `core/execution.py` / `core/mergeops.py`, in float64. Every numeric claim
+  in the test suite is anchored to it.
+* `JaxBackend` — the per-stage loop as jit-compiled jnp code with static
+  shapes (`core/jaxexec.py`): Phase-1 contention histograms dispatch to
+  `repro.kernels.histogram`, the Phase-3 padded gather + lambda and the
+  Phase-4 segment-combine run as one fused XLA executable (the combine
+  dispatching to `repro.kernels.segment_combine`, Pallas on TPU), and the
+  store's values stay device-resident between stages (a version-tracked
+  cache keyed on `DataStore.version`). Values are computed in float32 by
+  default — the device-native precision — and match the oracle within float
+  tolerance; pass ``dtype="float64"`` (requires ``jax_enable_x64``) for
+  full-precision parity.
+
+The backend-parity contract: per-phase **words and rounds are bit-identical**
+across backends, because every quantity the cost model consumes (execution
+sites, written-key sets, message widths) is computed on the host by the same
+code regardless of backend — only the floating-point *values* differ, within
+tolerance. `tests/test_backend_parity.py` pins this for all four engines.
+
+Lambdas under the jax backend are traced with jnp arrays; a lambda that is
+not traceable (calls numpy on its inputs, data-dependent control flow) is
+detected on first use and permanently routed to the numpy path for that
+function object — correctness never depends on traceability. Jitted programs
+are cached per (lambda object, shape signature): reuse the same function
+object across stages (module-level lambdas, not per-call closures) to avoid
+retracing.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from . import execution
+from .mergeops import MergeOp
+from .registry import get_backend_cls, register_backend
+
+# merges the jitted combine path implements; anything else falls back to the
+# oracle apply (still correct, just not fused)
+_JAX_MERGES = ("add", "min", "max", "or", "write")
+
+
+@register_backend("numpy")
+class NumpyBackend:
+    """The reference oracle: the float64 pure-numpy pass, unchanged."""
+
+    name = "numpy"
+
+    # -- phase 3 -----------------------------------------------------------
+    def execute(self, tasks, store, f: Callable, merge: Optional[MergeOp] = None
+                ) -> Dict[str, Optional[np.ndarray]]:
+        return execution.execute(tasks, store, f)
+
+    # -- phase 4 -----------------------------------------------------------
+    def apply_writes(self, tasks, store, updates, merge: MergeOp, cost) -> None:
+        execution.apply_writes(tasks, store, updates, merge, cost)
+
+    # -- phase 1 -----------------------------------------------------------
+    def key_counts(self, keys: np.ndarray, num_keys: int, weights=None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """(unique keys, int64 counts) — the observed per-chunk demand."""
+        uk, inv = np.unique(np.asarray(keys, dtype=np.int64),
+                            return_inverse=True)
+        if weights is None:
+            rc = np.bincount(inv, minlength=uk.size).astype(np.int64)
+        else:
+            rc = np.bincount(inv, weights=np.asarray(weights, dtype=np.float64),
+                             minlength=uk.size).astype(np.int64)
+        return uk, rc
+
+    # -- phase 2 -----------------------------------------------------------
+    def argsort_stable(self, keys: np.ndarray) -> np.ndarray:
+        """The routing permutation (stable, so backends agree exactly)."""
+        return np.argsort(keys, kind="stable")
+
+    # -- DistEdgeMap local combine ----------------------------------------
+    def combine_by_key(self, values: np.ndarray, keys: np.ndarray,
+                       num_keys: int, merge: MergeOp, order: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """⊗-combine update rows per destination key; returns
+        (sorted unique keys, combined rows aligned with them)."""
+        uniq, seg = np.unique(keys, return_inverse=True)
+        combined = merge.combine_segments(values, seg, uniq.size, order)
+        return uniq, combined
+
+
+@register_backend("jax")
+class JaxBackend(NumpyBackend):
+    """The jitted execution path (`core/jaxexec.py` + `repro.kernels`).
+
+    Numerics only: every cost-model input is still produced by the host code
+    paths, so reports are bit-identical to the numpy backend's.
+    """
+
+    name = "jax"
+
+    def __init__(self, dtype: str = "float32"):
+        import jax  # deferred: importing repro.core must not require jax init
+
+        from . import jaxexec
+
+        self._jax = jax
+        self._jx = jaxexec
+        self._jnp = jax.numpy
+        if dtype not in ("float32", "float64"):
+            raise ValueError(f"unsupported jax backend dtype {dtype!r}")
+        if dtype == "float64" and not jax.config.jax_enable_x64:
+            raise ValueError(
+                "dtype='float64' needs x64: set JAX_ENABLE_X64=1 or "
+                "jax.config.update('jax_enable_x64', True) before use")
+        self.dtype = dtype
+        self._np_dtype = np.dtype(dtype)
+        self._host_lambdas: set = set()  # ids of fns proven untraceable
+        self._stash = None  # one-slot (execute → apply_writes) carry
+        self._route = None  # one-slot combine_by_key routing cache
+
+    # -- device-resident store values --------------------------------------
+    def _device_values(self, store):
+        cache = store.__dict__.setdefault("_device_values", {})
+        ent = cache.get(self.dtype)
+        if ent is not None and ent[0] == store.version:
+            return ent[1]
+        dv = self._jnp.asarray(store.values.astype(self._np_dtype, copy=False))
+        cache[self.dtype] = (store.version, dv)
+        return dv
+
+    def _remember_values(self, store, dv) -> None:
+        store.__dict__.setdefault("_device_values", {})[self.dtype] = (
+            store.version, dv)
+
+    def _di(self, arr):
+        return self._jnp.asarray(np.asarray(arr).astype(np.int32, copy=False))
+
+    # -- phase 3 (+ fused phase-4 ⊗) ---------------------------------------
+    def execute(self, tasks, store, f: Callable, merge: Optional[MergeOp] = None
+                ) -> Dict[str, Optional[np.ndarray]]:
+        self._stash = None
+        if tasks.n == 0 or id(f) in self._host_lambdas \
+                or store.num_keys >= 2**30:
+            return execution.execute(tasks, store, f)
+
+        n = tasks.n
+        writes = tasks.write_keys >= 0
+        w_rows = np.flatnonzero(writes)
+        pr = tasks.priority
+        combine = bool(
+            w_rows.size and merge is not None and merge.name in _JAX_MERGES
+            and int(pr.min(initial=0)) > -(2**31)
+            and int(pr.max(initial=0)) < 2**31 - 1)
+        # a lambda that never returns an update makes want_update moot; when
+        # there ARE writers but no fused combine, the engines need the real
+        # update rows for the oracle apply
+        want_update = bool(w_rows.size) and not combine
+        uniq = None
+        if combine:
+            uniq, seg_w = np.unique(tasks.write_keys[w_rows],
+                                    return_inverse=True)
+            B = 1 << max(int(w_rows.size - 1).bit_length(), 4)
+            w_idx = np.full(B, n, dtype=np.int32)
+            w_idx[:w_rows.size] = w_rows
+            seg = np.full(B, B, dtype=np.int32)
+            seg[:w_rows.size] = seg_w
+            order = np.zeros(B, dtype=np.int32)
+            order[:w_rows.size] = pr[w_rows]
+        else:
+            w_idx = np.zeros(1, dtype=np.int32)
+            seg = order = w_idx
+        merge_name = merge.name if combine else "add"
+
+        dv = self._device_values(store)
+        ctx = self._jnp.asarray(
+            np.asarray(tasks.contexts).astype(self._np_dtype, copy=False))
+        fwd = execution._accepts_mask(f)
+        kw = dict(f=f, fwd_mask=fwd, merge_name=merge_name, combine=combine,
+                  want_update=want_update)
+        try:
+            if tasks.max_arity <= 1:
+                out = self._jx.run_stage_flat(
+                    dv, self._di(tasks.read_keys), ctx, self._di(w_idx),
+                    self._di(seg), self._di(order), **kw)
+            else:
+                row = tasks.pair_task
+                col = np.arange(tasks.nnz, dtype=np.int64) \
+                    - tasks.read_indptr[:-1][row]
+                mask = np.zeros((n, tasks.max_arity), dtype=bool)
+                mask[row, col] = True
+                out = self._jx.run_stage_ragged(
+                    dv, self._di(tasks.read_indices), self._di(row),
+                    self._di(col), self._jnp.asarray(mask), ctx,
+                    self._di(w_idx), self._di(seg), self._di(order), **kw)
+        except Exception:
+            # untraceable lambda (numpy calls on tracers, data-dependent
+            # control flow, ...): route this function object to the oracle
+            # path from now on — if it is genuinely broken it raises there
+            self._host_lambdas.add(id(f))
+            return execution.execute(tasks, store, f)
+
+        host: Dict[str, Optional[np.ndarray]] = {
+            key: (None if out.get(key) is None else np.asarray(out[key]))
+            for key in ("result", "update")
+        }
+        combined = out.get("combined")
+        if combine and combined is not None:
+            # the engines only ever hand `update` back to apply_writes, and
+            # the combine already happened on device — carry a zero-copy
+            # shape-only placeholder instead of transferring n·w floats
+            placeholder = np.broadcast_to(
+                np.zeros((), dtype=self._np_dtype), (n, combined.shape[1]))
+            host["update"] = placeholder
+            self._stash = (id(tasks), id(placeholder), placeholder, uniq,
+                           combined, merge.name, dv)
+        return host
+
+    # -- phase 4 ⊙ ----------------------------------------------------------
+    def apply_writes(self, tasks, store, updates, merge: MergeOp, cost) -> None:
+        if updates is None:
+            return
+        stash, self._stash = self._stash, None
+        updates = np.atleast_2d(np.asarray(updates))
+        if updates.shape[0] != tasks.n:
+            updates = updates.T
+        if (stash is None or stash[0] != id(tasks)
+                or stash[1] != id(updates) or stash[5] != merge.name):
+            # no fused combine for this (tasks, updates) pair — oracle apply.
+            # Guard the sentinel: if an engine transformed our zero-strided
+            # placeholder (copy/slice breaks the id match), applying it as
+            # real update rows would silently write zeros — refuse instead.
+            if (stash is not None and updates.size
+                    and 0 in updates.strides and not updates.any()):
+                raise RuntimeError(
+                    "jax backend: the zero-copy update placeholder from "
+                    "execute() was transformed before apply_writes (id no "
+                    "longer matches the fused combine). Pass the update "
+                    "array through unchanged, or use backend='numpy' for "
+                    "this engine.")
+            execution.apply_writes(tasks, store, updates, merge, cost)
+            return
+        _, _, _, uniq, combined_dev, _, dv = stash
+        if uniq.size == 0:
+            return
+        # authoritative host apply (store dtype), exactly the oracle's ⊙
+        combined = np.asarray(combined_dev)[:uniq.size].astype(
+            store.values.dtype, copy=False)
+        store.write_rows(uniq, merge.apply(store.values[uniq], combined))
+        cost.work(store.home[uniq], 1.0)
+        # keep the device copy in lock-step (no full re-upload next stage);
+        # padding keys are ascending out-of-range rows, so the scatter sees
+        # sorted unique indices and is dropped past num_keys
+        B = combined_dev.shape[0]
+        uniq_pad = np.concatenate([
+            uniq, np.arange(store.num_keys, store.num_keys + (B - uniq.size),
+                            dtype=np.int64)])
+        new_dv = self._jx.apply_rows(dv, self._di(uniq_pad), combined_dev,
+                                     merge_name=merge.name)
+        self._remember_values(store, new_dv)
+
+    # -- phase 1 ------------------------------------------------------------
+    def key_counts(self, keys: np.ndarray, num_keys: int, weights=None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        keys = np.asarray(keys, dtype=np.int64)
+        # dense demand: the kernels.histogram scatter (Pallas on TPU);
+        # sparse keys over a huge range: the host path (identical counts)
+        if keys.size == 0 or num_keys > max(1024, 8 * keys.size) \
+                or num_keys >= 2**31:
+            return super().key_counts(keys, num_keys, weights)
+        w = None if weights is None else self._di(np.asarray(weights))
+        counts = np.asarray(self._jx.contention_counts(
+            self._di(keys), int(num_keys), weights=w))
+        uk = np.flatnonzero(counts)
+        return uk.astype(np.int64), counts[uk].astype(np.int64)
+
+    # -- phase 2 ------------------------------------------------------------
+    def argsort_stable(self, keys: np.ndarray) -> np.ndarray:
+        return np.asarray(
+            self._jx.stable_argsort(self._jnp.asarray(keys))
+        ).astype(np.int64)
+
+    # -- DistEdgeMap local combine ------------------------------------------
+    def combine_by_key(self, values, keys, num_keys, merge: MergeOp, order):
+        """Add-combines over a *repeated* key set (PageRank re-reduces the
+        same edge list every round) run scatter-free on device via the
+        cached routing permutation; everything else — first sighting of a
+        key set, non-add merges, tiny batches — uses the oracle path. The
+        returned key list is identical either way; combined sums agree
+        within float32 prefix-sum tolerance."""
+        if merge.name == "add" and keys.size >= 4096 and num_keys < 2**31:
+            rt = self._route
+            if (rt is not None and rt[0].size == keys.size
+                    and np.array_equal(rt[0], keys)):
+                if len(rt) == 1:
+                    # second sighting: the key set repeats — now the argsort
+                    # investment pays off (a one-shot key set never sorts
+                    # twice, it only pays the O(m) copy + compare)
+                    perm = np.argsort(keys, kind="stable")
+                    sk = keys[perm]
+                    ends = np.flatnonzero(np.r_[sk[1:] != sk[:-1], True])
+                    rt = self._route = (rt[0], self._di(perm), self._di(ends),
+                                        sk[ends].astype(np.int64))
+                dev = self._jx.sorted_segment_sum(
+                    self._jnp.asarray(np.asarray(values).astype(
+                        self._np_dtype, copy=False)), rt[1], rt[2])
+                return rt[3].copy(), np.asarray(dev).astype(np.float64)
+            self._route = (keys.copy(),)  # candidate; build routing if seen again
+        return super().combine_by_key(values, keys, num_keys, merge, order)
+
+
+def make_backend(spec) -> NumpyBackend:
+    """Coerce a user-facing `backend=` spec into a backend instance.
+
+    None/"numpy" → the shared numpy oracle; "jax" → a `JaxBackend`
+    (float32); an existing backend instance passes through (shared device
+    caches across sessions).
+    """
+    if spec is None:
+        return _NUMPY
+    if isinstance(spec, NumpyBackend):
+        return spec
+    if isinstance(spec, str):
+        if spec == "numpy":
+            return _NUMPY
+        return get_backend_cls(spec)()
+    raise TypeError(f"bad backend spec: {spec!r}")
+
+
+_NUMPY = NumpyBackend()

@@ -22,10 +22,11 @@ from typing import Callable, Dict
 
 import numpy as np
 
+from .backend import make_backend
 from .cost import CostAccumulator
 from .datastore import DataStore, TaskBatch
 from .engine import OrchestrationResult, _L0_HEADER
-from .execution import apply_writes, execute, update_width
+from .execution import update_width
 from .mergeops import MergeOp, get_merge_op
 from .registry import register_engine
 from .replication import charge_write_through
@@ -57,9 +58,11 @@ class DirectPullEngine:
     "Direct Pull" — the RDMA pattern). Hot chunks swamp their home machine
     with outbound B-word replies."""
 
-    def __init__(self, num_machines: int, work_per_task: float = 1.0):
+    def __init__(self, num_machines: int, work_per_task: float = 1.0,
+                 backend=None):
         self.P = int(num_machines)
         self.work_per_task = work_per_task
+        self.backend = make_backend(backend)
 
     def run_stage(self, tasks, store, f, write_back="add", return_results=False,
                   replicas=None):
@@ -81,7 +84,7 @@ class DirectPullEngine:
         cost.end()
 
         cost.begin("pull_execute")
-        out = execute(tasks, store, f)
+        out = self.backend.execute(tasks, store, f, merge)
         cost.work(tasks.origin, self.work_per_task)
         cost.end()
         # results already live at the task's origin machine — no return traffic
@@ -101,7 +104,7 @@ class DirectPullEngine:
                 cost.tick()
                 charge_write_through(cost, store.home, replicas,
                                      tasks.write_keys[writes], w_u)
-            apply_writes(tasks, store, updates, merge, cost)
+            self.backend.apply_writes(tasks, store, updates, merge, cost)
         cost.end()
 
         return OrchestrationResult(out.get("result"), cost.totals(),
@@ -115,9 +118,11 @@ class DirectPushEngine:
     contexts *and* with the execution work itself. Multi-get tasks go to
     their primary key's home and pull the remaining chunks there."""
 
-    def __init__(self, num_machines: int, work_per_task: float = 1.0):
+    def __init__(self, num_machines: int, work_per_task: float = 1.0,
+                 backend=None):
         self.P = int(num_machines)
         self.work_per_task = work_per_task
+        self.backend = make_backend(backend)
 
     def run_stage(self, tasks, store, f, write_back="add", return_results=False,
                   replicas=None):
@@ -163,7 +168,7 @@ class DirectPushEngine:
         cost.end()
 
         cost.begin("push_execute")
-        out = execute(tasks, store, f)
+        out = self.backend.execute(tasks, store, f, merge)
         cost.work(exec_site, self.work_per_task)
         results = out.get("result")
         if return_results and results is not None:
@@ -187,7 +192,7 @@ class DirectPushEngine:
                 charge_write_through(cost, store.home, replicas,
                                      tasks.write_keys[writes],
                                      update_width(updates))
-            apply_writes(tasks, store, updates, merge, cost)
+            self.backend.apply_writes(tasks, store, updates, merge, cost)
         cost.end()
 
         return OrchestrationResult(results, cost.totals(), exec_site, {})
@@ -201,9 +206,11 @@ class SortBasedEngine:
     TD-Orch eliminates. Modeled after KaDiS-style sample sort with perfect
     balance (generous to the baseline)."""
 
-    def __init__(self, num_machines: int, work_per_task: float = 1.0):
+    def __init__(self, num_machines: int, work_per_task: float = 1.0,
+                 backend=None):
         self.P = int(num_machines)
         self.work_per_task = work_per_task
+        self.backend = make_backend(backend)
 
     def run_stage(self, tasks, store, f, write_back="add", return_results=False,
                   replicas=None):
@@ -217,10 +224,8 @@ class SortBasedEngine:
 
         # ---- pass 1: global sample-sort of tasks by (primary) read key
         cost.begin("sort_pass")
-        order = np.argsort(
-            np.where(primary >= 0, primary, tasks.write_keys),
-            kind="stable",
-        )
+        order = self.backend.argsort_stable(
+            np.where(primary >= 0, primary, tasks.write_keys))
         block = max(1, -(-n // P))
         sorted_machine = np.empty(n, dtype=np.int64)
         sorted_machine[order] = np.arange(n, dtype=np.int64) // block
@@ -243,7 +248,7 @@ class SortBasedEngine:
         cost.end()
 
         cost.begin("sort_execute")
-        out = execute(tasks, store, f)
+        out = self.backend.execute(tasks, store, f, merge)
         cost.work(sorted_machine, self.work_per_task)
         cost.end()
 
@@ -259,7 +264,7 @@ class SortBasedEngine:
                 cost.send(mch, store.home[key], w_u + 1)
                 charge_write_through(cost, store.home, replicas,
                                      tasks.write_keys[writes], w_u)
-            apply_writes(tasks, store, updates, merge, cost)
+            self.backend.apply_writes(tasks, store, updates, merge, cost)
         results = out.get("result")
         if return_results and results is not None:
             w_r = results.shape[1] if results.ndim > 1 else 1

@@ -184,6 +184,18 @@ class StageReport:
             "compute": float(comp.max() / max(comp.mean(), 1e-12)),
         }
 
+    def phase_signature(self):
+        """The stage's full cost content as a comparable value: per phase,
+        (name, rounds, sent, recv, compute, local) with per-machine arrays
+        as tuples. Two backends honoring the parity contract produce EQUAL
+        signatures — this is what `assert_cost_parity` (and the
+        `tests/test_backend_parity.py` suite) pins, bit-for-bit."""
+        return [
+            (ph.name, ph.rounds, tuple(ph.sent), tuple(ph.recv),
+             tuple(ph.compute), tuple(ph.local))
+            for ph in self.phases
+        ]
+
     def summary(self) -> Dict[str, float]:
         return {
             "P": self.P,
@@ -194,6 +206,22 @@ class StageReport:
             "comm_imbalance": self.imbalance()["comm"],
             "compute_imbalance": self.imbalance()["compute"],
         }
+
+
+def assert_cost_parity(a: "StageReport", b: "StageReport") -> None:
+    """The backend-parity contract, executable: two stage reports must carry
+    identical per-phase words/rounds/work — exact equality, no tolerance.
+    Raises AssertionError naming the first differing phase/field."""
+    names_a = [ph.name for ph in a.phases]
+    names_b = [ph.name for ph in b.phases]
+    assert names_a == names_b, f"phase lists differ: {names_a} vs {names_b}"
+    for pa, pb in zip(a.phases, b.phases):
+        assert pa.rounds == pb.rounds, \
+            f"{pa.name}: rounds {pa.rounds} != {pb.rounds}"
+        for field in ("sent", "recv", "compute", "local"):
+            va, vb = getattr(pa, field), getattr(pb, field)
+            assert np.array_equal(va, vb), \
+                f"{pa.name}: per-machine {field} differ ({va} vs {vb})"
 
 
 @dataclasses.dataclass

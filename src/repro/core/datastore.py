@@ -28,6 +28,10 @@ class DataStore:
     home: np.ndarray  # (num_keys,) int64
     chunk_words: int  # B — words charged when a chunk moves
     P: int
+    # monotonic write counter: execution backends that keep a device-resident
+    # copy of `values` (core/backend.py JaxBackend) key their cache on it, so
+    # every mutation must go through write_rows()/touch()
+    version: int = 0
 
     @staticmethod
     def create(
@@ -51,6 +55,18 @@ class DataStore:
     @property
     def value_width(self) -> int:
         return self.values.shape[1]
+
+    def write_rows(self, keys: np.ndarray, rows: np.ndarray) -> None:
+        """Authoritative row update. The single mutation path all engines and
+        loaders use — bumps `version` so device-side value caches invalidate
+        (or incrementally apply) instead of serving stale chunks."""
+        self.values[np.asarray(keys, dtype=np.int64)] = rows
+        self.version += 1
+
+    def touch(self) -> None:
+        """Declare an out-of-band mutation of `values` (direct array writes
+        by user code): invalidates any backend device cache."""
+        self.version += 1
 
     def snapshot(self) -> np.ndarray:
         return self.values.copy()

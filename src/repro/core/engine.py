@@ -37,10 +37,10 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from .backend import make_backend
 from .comm_forest import CommForest
 from .cost import CostAccumulator, StageReport
 from .datastore import DataStore, TaskBatch
-from .execution import apply_writes, call_lambda, gather_values
 from .mergeops import MergeOp, get_merge_op
 from .registry import register_engine
 from .replication import ReplicaSet, charge_write_through
@@ -106,12 +106,16 @@ class TDOrchEngine:
         C: int | None = None,
         sigma: int | None = None,
         work_per_task: float = 1.0,
+        backend=None,
     ):
         self.P = int(num_machines)
         self.forest = CommForest.build(self.P, fanout)
         self.C_override = C
         self.sigma_override = sigma
         self.work_per_task = work_per_task
+        # numeric execution backend ("numpy" oracle | "jax" jitted); cost
+        # accounting below is backend-independent by construction
+        self.backend = make_backend(backend)
 
     # ------------------------------------------------------------------
     def run_stage(
@@ -169,8 +173,7 @@ class TDOrchEngine:
 
         # ---------------- Phase 3: execution -------------------------------
         cost.begin("phase3_execute")
-        in_vals, in_mask = gather_values(tasks, store)
-        out = call_lambda(f, tasks.contexts, in_vals, in_mask)
+        out = self.backend.execute(tasks, store, f, merge)
         updates = out.get("update")
         results = out.get("result")
         cost.work(exec_site, self.work_per_task)
@@ -194,8 +197,8 @@ class TDOrchEngine:
         # leaf-level half of contention detection — so the demand histogram
         # keeps seeing the full per-chunk request stream
         if pair_local.any():
-            lk, lc = np.unique(tasks.read_indices[pair_local],
-                               return_counts=True)
+            lk, lc = self.backend.key_counts(
+                tasks.read_indices[pair_local], store.num_keys)
             for k, c in zip(lk, lc):
                 refcount[int(k)] = refcount.get(int(k), 0) + int(c)
         return OrchestrationResult(
@@ -267,10 +270,10 @@ class TDOrchEngine:
         pair_site[pay[l0]] = pm[l0]
         for p in pay[~l0]:
             stores.parent[int(p)] = -2  # reached root
-        # per-key observed refcount at root
+        # per-key observed refcount at root — the Phase-1 contention
+        # histogram (kernels.histogram scatter on the jax backend)
         if key.size:
-            uk, inv = np.unique(key, return_inverse=True)
-            rc = np.bincount(inv, weights=cnt.astype(np.float64)).astype(np.int64)
+            uk, rc = self.backend.key_counts(key, store.num_keys, weights=cnt)
         else:
             uk = np.empty(0, dtype=np.int64)
             rc = np.empty(0, dtype=np.int64)
@@ -451,7 +454,7 @@ class TDOrchEngine:
                                  tasks.write_keys[writes], w_u)
 
         # --- numeric application (single authoritative ⊙ per chunk, shared)
-        apply_writes(tasks, store, updates, merge, cost)
+        self.backend.apply_writes(tasks, store, updates, merge, cost)
 
     # ------------------------------------------------------------------
     def _forest_scatter_reduce(self, wkeys, site, store, cost, w_u):

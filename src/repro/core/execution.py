@@ -2,7 +2,11 @@
 
 Numeric results are computed by ONE vectorized gather/execute/apply pass used
 identically by TD-Orch and every baseline — only *cost* accounting differs
-between engines. This module is that shared pass.
+between engines. This module is that shared pass, in its reference (numpy,
+float64) form: `core/backend.py` wraps it as the `"numpy"` execution backend
+— the oracle every other backend (the jitted `"jax"` pipeline) is tested
+against — and engines reach it through their `backend` rather than calling
+here directly.
 
 Gathered views: an arity-≤1 batch hands the lambda the legacy
 `(n, value_width)` array (zeros where a task reads nothing). A ragged batch
@@ -93,7 +97,7 @@ def apply_writes(tasks: TaskBatch, store: DataStore, updates,
     uniq, seg = np.unique(wk, return_inverse=True)
     combined = merge.combine_segments(updates[writes], seg, uniq.size,
                                       tasks.priority[writes])
-    store.values[uniq] = merge.apply(store.values[uniq], combined)
+    store.write_rows(uniq, merge.apply(store.values[uniq], combined))
     cost.work(store.home[uniq], 1.0)
 
 

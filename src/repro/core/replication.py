@@ -12,7 +12,8 @@ This module is that subsystem:
     counts every stage (the contention detection the engine already runs —
     observing demand is free);
   * a **`select_hot`-based electorate** (the same top-H election the SPMD
-    realization in `core/spmd.py` and the embedding cache use): every
+    realization and the jitted execution backend share via
+    `core/jaxexec.py`, and the embedding cache uses): every
     `refresh` stages the top-H chunks by decayed demand are re-elected;
   * a **replica directory** — `ReplicaSet`, a chunk→machine bitmap living
     alongside the `DataStore`'s `home` placement map — that every engine
@@ -122,7 +123,9 @@ def decayed_election(counts, num_hot: int, decay: float, min_count=1):
     try:
         import jax.numpy as jnp
 
-        from .spmd import select_hot
+        # the same top-H election primitive the SPMD MoE path and the jitted
+        # execution backend use (core/jaxexec.py is its shared home)
+        from .jaxexec import select_hot
 
         counts = jnp.asarray(counts)
         rank_key = counts if jnp.issubdtype(counts.dtype, jnp.integer) \

@@ -22,6 +22,7 @@ from typing import Callable, Dict, Optional
 
 import numpy as np
 
+from .backend import make_backend
 from .cost import SessionReport, StageReport
 from .datastore import DataStore, TaskBatch
 from .engine import OrchestrationResult
@@ -32,6 +33,12 @@ from .replication import make_replicator
 
 class Orchestrator:
     """A long-lived scheduling session over one store and one engine.
+
+    `backend=` selects the numeric execution backend threaded into the
+    engine ("numpy" — the float64 reference oracle, default — or "jax", the
+    jit-compiled pipeline of `core/backend.py`; also accepts a backend
+    instance to share device caches across sessions). Cost reports are
+    bit-identical across backends.
 
     `replication=` turns on the session-owned hot-chunk subsystem
     (`core.replication`): pass True for defaults, a dict / `ReplicationConfig`
@@ -44,11 +51,20 @@ class Orchestrator:
     """
 
     def __init__(self, store: DataStore, engine: str = "tdorch", *,
-                 replication=None, **engine_opts):
+                 backend=None, replication=None, **engine_opts):
         self.store = store
         self.engine_name = engine if isinstance(engine, str) else type(engine).__name__
-        self.engine = (make_engine(engine, store.P, **engine_opts)
-                       if isinstance(engine, str) else engine)
+        if isinstance(engine, str):
+            self.engine = make_engine(engine, store.P,
+                                      backend=make_backend(backend),
+                                      **engine_opts)
+        else:
+            if backend is not None:
+                raise ValueError(
+                    "pass backend= to the engine's constructor when handing "
+                    "Orchestrator an engine instance — a session cannot "
+                    "swap the backend of a prebuilt engine")
+            self.engine = engine
         self.replicator = make_replicator(replication, store.home, store.P,
                                           store.chunk_words)
         self._report = SessionReport(store.P)
@@ -62,6 +78,11 @@ class Orchestrator:
     def forest(self):
         """The session's cached CommForest (None for forest-free engines)."""
         return getattr(self.engine, "forest", None)
+
+    @property
+    def backend(self):
+        """The engine's numeric execution backend (numpy oracle / jitted jax)."""
+        return getattr(self.engine, "backend", None)
 
     @property
     def report(self) -> SessionReport:

@@ -29,12 +29,18 @@ Everything is written per-shard (to be wrapped in shard_map); pass
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+# the four-phase device primitives live in core/jaxexec.py, shared with the
+# jitted simulator backend (core/backend.py) — re-exported here so the SPMD
+# surface is unchanged
+from .jaxexec import (Routing, bucket_routing, contention_counts,
+                      gather_from_buckets, scatter_to_buckets, select_hot,
+                      sort_by_group as _sort_by_group)
 
 
 # ---------------------------------------------------------------------------
@@ -44,79 +50,12 @@ def detect_contention(item_ids: jnp.ndarray, num_items: int,
                       axis_name: Optional[str] = None) -> jnp.ndarray:
     """Global reference count per data item (§3.1). One histogram + one
     psum: the communication forest for *counts* degenerates to the
-    hardware's all-reduce tree."""
-    counts = jnp.zeros(num_items, dtype=jnp.int32).at[item_ids.reshape(-1)].add(
-        1, mode="drop"
-    )
+    hardware's all-reduce tree. The histogram is the shared Phase-1 op
+    (`repro.kernels.histogram`, Pallas on TPU)."""
+    counts = contention_counts(item_ids.reshape(-1), num_items)
     if axis_name is not None:
         counts = lax.psum(counts, axis_name)
     return counts
-
-
-def select_hot(counts: jnp.ndarray, num_hot: int, min_count: int = 1):
-    """Top-`num_hot` items by demand, thresholded. Returns (hot_ids (H,),
-    rank lookup (E,) with -1 = cold). Static H keeps shapes jit-stable —
-    the SPMD analogue of the meta-task set's bounded size."""
-    num_items = counts.shape[0]
-    top_counts, hot_ids = lax.top_k(counts, num_hot)
-    valid = top_counts >= min_count
-    # invalid slots point at item 0 but are masked out of the lookup
-    lookup = jnp.full((num_items,), -1, dtype=jnp.int32)
-    ranks = jnp.arange(num_hot, dtype=jnp.int32)
-    lookup = lookup.at[hot_ids].set(jnp.where(valid, ranks, -1), mode="drop")
-    return hot_ids, lookup, valid
-
-
-# ---------------------------------------------------------------------------
-# sorted capacity-bounded routing (the push path's meta-structure)
-# ---------------------------------------------------------------------------
-class Routing(NamedTuple):
-    order: jnp.ndarray  # sort order over assignments
-    dest: jnp.ndarray  # destination bucket per sorted assignment
-    pos: jnp.ndarray  # position within bucket per sorted assignment
-    keep: jnp.ndarray  # fits under capacity
-
-
-def bucket_routing(dest: jnp.ndarray, num_buckets: int, capacity: int,
-                   active: jnp.ndarray) -> Routing:
-    """Stable-sort assignments by destination bucket and compute each one's
-    slot; slots ≥ capacity are dropped (push-side overflow — rare once the
-    hot items are pulled instead, which is the point of push-pull)."""
-    big = jnp.asarray(num_buckets, dest.dtype)
-    key = jnp.where(active, dest, big)  # inactive rows sort to the end
-    order = jnp.argsort(key, stable=True)
-    key_sorted = key[order]
-    # position within each bucket = index − start(bucket)
-    counts = jnp.zeros(num_buckets + 1, jnp.int32).at[key_sorted].add(1)
-    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
-                              jnp.cumsum(counts)[:-1]])
-    pos = jnp.arange(dest.shape[0], dtype=jnp.int32) - starts[key_sorted]
-    keep = (key_sorted < num_buckets) & (pos < capacity)
-    return Routing(order=order, dest=key_sorted, pos=pos, keep=keep)
-
-
-def scatter_to_buckets(rows: jnp.ndarray, routing: Routing, num_buckets: int,
-                       capacity: int, fill=0) -> jnp.ndarray:
-    """(A, d) rows -> (num_buckets, capacity, d) send buffer."""
-    d_shape = rows.shape[1:]
-    buf = jnp.full((num_buckets, capacity) + d_shape, fill, dtype=rows.dtype)
-    src = rows[routing.order]
-    return buf.at[routing.dest, routing.pos].set(
-        jnp.where(routing.keep.reshape((-1,) + (1,) * len(d_shape)), src, fill),
-        mode="drop",
-    )
-
-
-def gather_from_buckets(buf: jnp.ndarray, routing: Routing,
-                        num_assign: int) -> jnp.ndarray:
-    """Inverse of scatter_to_buckets: (B, cap, d) -> (A, d) in original
-    assignment order (dropped slots read back as zeros)."""
-    d_shape = buf.shape[2:]
-    got = buf[routing.dest, routing.pos]
-    got = jnp.where(routing.keep.reshape((-1,) + (1,) * len(d_shape)), got, 0)
-    inv = jnp.zeros_like(routing.order).at[routing.order].set(
-        jnp.arange(routing.order.shape[0]))
-    return got[inv]
 
 
 # ---------------------------------------------------------------------------
@@ -164,12 +103,6 @@ def grouped_swiglu(xs: jnp.ndarray, w_in: jnp.ndarray, w_out: jnp.ndarray,
     out_bins = jnp.einsum("gcf,gfd->gcd", act, w_out)
     out = out_bins[jnp.where(keep, gid, 0), jnp.where(keep, pos, 0)]
     return jnp.where(keep[:, None], out, 0.0)
-
-
-def _sort_by_group(ids: jnp.ndarray, num_groups: int):
-    order = jnp.argsort(ids, stable=True)
-    sizes = jnp.zeros(num_groups + 1, jnp.int32).at[ids].add(1)[:num_groups]
-    return order, sizes
 
 
 # ---------------------------------------------------------------------------

@@ -55,13 +55,24 @@ def _session(og, kw):
     costs accumulate across rounds.
 
     Returns (session, per_call_opts): a fresh session absorbs the caller's
-    edge-map options as its defaults; a caller-provided session keeps its own
-    defaults and the options ride along per call instead."""
+    edge-map options as its defaults — and its `backend=` / `replication=`
+    session options — while a caller-provided session keeps its own defaults
+    and the options ride along per call instead."""
     opts = {k: kw[k] for k in _EDGE_OPTS if k in kw}
     sess = kw.pop("session", None)
+    backend = kw.pop("backend", None)
+    replication = kw.pop("replication", None)
     if sess is not None:
+        # a caller-provided session keeps its own backend/replicator unless
+        # explicitly overridden — forward per-call (dist_edge_map accepts
+        # both) instead of silently dropping the kwargs
+        if backend is not None:
+            opts["backend"] = backend
+        if replication is not None:
+            opts["replicate"] = replication
         return sess, opts
-    return GraphSession(og, opts), {}
+    return GraphSession(og, opts, replication=replication,
+                        backend=backend), {}
 
 
 # ---------------------------------------------------------------------------

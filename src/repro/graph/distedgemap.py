@@ -34,6 +34,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from ..core.backend import make_backend
 from ..core.cost import CostAccumulator, StageReport
 from ..core.mergeops import get_merge_op
 from ..core.replication import charge_write_through
@@ -67,10 +68,13 @@ def dist_edge_map(
     threshold_frac: float = 1 / 20,  # Ligra direction heuristic
     replicate=None,  # hot-vertex replication: None = session's setting,
     #                  True/dict/config = opt this session in, False = off
+    backend=None,  # numeric backend: None = session's, "numpy"/"jax"/instance
 ) -> tuple[DistVertexSubset, EdgeMapStats]:
     g = og.graph
     merge = get_merge_op(merge_value)
     sess = session if session is not None else session_for(og)
+    bk = make_backend(backend) if backend is not None \
+        else (getattr(sess, "backend", None) or make_backend(None))
     idx = U.indices
     sum_deg = U.sum_degrees(og.out_indptr)
 
@@ -167,9 +171,10 @@ def dist_edge_map(
         # 2–5.7× band Table 4 measures. Numerics are unaffected.
         if cost is not None:
             cost.work(og.edge_machine[edge_ids], 1.0 if fast_local else 3.0)
-        uniq_d, seg = np.unique(d, return_inverse=True)
-        combined = merge.combine_segments(vals[:, None], seg, uniq_d.size,
-                                          edge_ids)
+        # per-destination ⊗-combine through the session's execution backend
+        # (numpy oracle, or the jitted segment scatter of core/jaxexec.py)
+        uniq_d, combined = bk.combine_by_key(vals[:, None], d, og.n, merge,
+                                             edge_ids)
     else:
         uniq_d = np.empty(0, dtype=np.int64)
         combined = np.empty((0, 1))

@@ -24,6 +24,7 @@ from typing import List, Tuple
 
 import numpy as np
 
+from ..core.backend import make_backend
 from ..core.cost import CostAccumulator, SessionReport
 from ..core.replication import make_replicator
 
@@ -107,11 +108,17 @@ class GraphSession:
     round — and keeps the hottest vertices' values resident everywhere, so
     their source-tree broadcasts become machine-local reads. Write-backs
     still ⊗-combine to the vertex home, then write-through to holders.
+
+    `backend=` selects the numeric execution backend for the per-round
+    edge-value combine ("numpy" — the float64 oracle, default — or "jax",
+    the jitted scatter of `repro.core.backend`); cost reports are
+    bit-identical either way.
     """
 
     og: "OrchestratedGraph"  # noqa: F821 — forward ref, avoids import cycle
     defaults: dict = dataclasses.field(default_factory=dict)
     replication: object = None  # None | True | dict | ReplicationConfig
+    backend: object = None  # None/"numpy" oracle | "jax" jitted | instance
 
     def __post_init__(self):
         og = self.og
@@ -119,6 +126,7 @@ class GraphSession:
                                        og.src_grp_machines, og.C)
         self.replicator = make_replicator(self.replication, og.vertex_home,
                                           og.P, VALUE_WORDS)
+        self.backend = make_backend(self.backend)
         self._report = SessionReport(og.P)
         self.stats: List = []
 

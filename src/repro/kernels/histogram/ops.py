@@ -1,16 +1,29 @@
-"""Public histogram op with backend selection."""
+"""Public histogram op with backend selection.
+
+`count_ids` is the Phase-1 contention histogram every consumer shares: the
+SPMD MoE dispatcher (`core/spmd.py`), the jitted execution backend
+(`core/backend.py` via `core/jaxexec.py`), and the hot-chunk electorate.
+Unweighted counts dispatch to the Pallas kernel on TPU; weighted counts
+(meta-task multiplicities riding aggregated descriptors) take the jnp
+scatter path on every backend — the Pallas kernel is a pure counter.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from .kernel import histogram
 from .ref import histogram_ref
 
 
 @functools.partial(jax.jit, static_argnames=("num_bins", "backend"))
-def count_ids(ids, num_bins: int, *, backend: str = "auto"):
+def count_ids(ids, num_bins: int, *, weights=None, backend: str = "auto"):
+    if weights is not None:
+        w = jnp.asarray(weights)
+        return jnp.zeros(num_bins, w.dtype).at[
+            jnp.asarray(ids).reshape(-1)].add(w.reshape(-1), mode="drop")
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "ref"
     if backend == "ref":

@@ -1,9 +1,18 @@
-"""Public segment-combine op with backend selection."""
+"""Public segment-combine op with backend selection.
+
+The Phase-4 merge-able ⊗: `combine_add` dispatches to the Pallas kernel on
+TPU (jnp fallback elsewhere); `combine` generalizes to the other
+set-associative merges from `core/mergeops.py` (min / max / or) as jnp
+scatter reductions with the same drop-out-of-range contract, so the jitted
+execution backend asks one op for every merge. Rows whose segment id is
+>= num_segments are dropped — the static-shape encoding of "writes nothing".
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from .kernel import segment_add
 from .ref import segment_add_ref
@@ -17,3 +26,24 @@ def combine_add(values, seg, num_segments: int, *, backend: str = "auto"):
         return segment_add_ref(values, seg, num_segments)
     return segment_add(values, seg, num_segments,
                        interpret=(backend == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "op", "backend"))
+def combine(values, seg, num_segments: int, *, op: str = "add",
+            backend: str = "auto"):
+    """Segment-⊗ for any set-associative merge: (N, W) values, (N,) seg ->
+    (num_segments, W). Empty segments hold the merge identity."""
+    if op == "add":
+        return combine_add(values, seg, num_segments, backend=backend)
+    out_shape = (num_segments,) + values.shape[1:]
+    big = jnp.asarray(jnp.finfo(values.dtype).max, values.dtype)
+    if op == "min":
+        return jnp.full(out_shape, big, values.dtype).at[seg].min(
+            values, mode="drop")
+    if op == "max":
+        return jnp.full(out_shape, -big, values.dtype).at[seg].max(
+            values, mode="drop")
+    if op == "or":
+        return jnp.zeros(out_shape, values.dtype).at[seg].max(
+            values, mode="drop")
+    raise KeyError(f"no segment combine for merge op {op!r}")

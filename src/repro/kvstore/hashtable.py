@@ -25,6 +25,22 @@ from ..core import (DataStore, OrchestrationResult, Orchestrator,
                     ReplicationConfig, SessionReport, TaskBatch)
 
 
+def _muladd_lambda(contexts: np.ndarray, in_vals: np.ndarray) -> Dict[str, np.ndarray]:
+    """The §4 GET/UPDATE lambda (multiply-and-add), module-level so jitted
+    backends cache one compiled program across every batch (a per-call
+    closure would retrace per batch)."""
+    mul = contexts[:, 1:2]
+    add = contexts[:, 2:3]
+    return {"update": in_vals * mul + add, "result": in_vals}
+
+
+def _flatten_lambda(contexts, vals, mask):
+    """Multi-get gather lambda: padded (n, A, w) view -> flat (n, A*w) rows
+    (shape-polymorphic and closure-free, so it traces once per batch shape)."""
+    flat = vals.reshape(vals.shape[0], -1) if vals.ndim == 3 else vals
+    return {"result": flat}
+
+
 def _replication_sig(replicate):
     """Hashable session-cache key for a `replicate=` spec."""
     if replicate is None or replicate is False:
@@ -77,10 +93,10 @@ class DistributedHashTable:
         return self.store.values
 
     def bulk_load(self, keys: np.ndarray, values: np.ndarray) -> None:
-        self.store.values[np.asarray(keys, dtype=np.int64)] = values
+        self.store.write_rows(keys, values)
 
     # ---- sessions ----------------------------------------------------------
-    def session(self, engine: str = "tdorch", replicate=None,
+    def session(self, engine: str = "tdorch", replicate=None, backend=None,
                 **engine_opts) -> Orchestrator:
         """The table's cached long-lived session for `engine` (+opts): the
         engine and its CommForest are constructed once, then reused by every
@@ -90,21 +106,28 @@ class DistributedHashTable:
         (True / dict of `ReplicationConfig` knobs): the session learns the
         key-demand histogram across batches and keeps the hottest chunks
         replicated on every machine — subsequent batches read them locally.
+
+        `backend=` selects the numeric execution backend ("numpy" oracle /
+        "jax" jitted, see `repro.core.backend`); sessions are cached per
+        backend, and a jax session keeps the table's values device-resident
+        across batches.
         """
         sig = (engine, _replication_sig(replicate),
+               backend if isinstance(backend, (str, type(None))) else id(backend),
                tuple(sorted(engine_opts.items())))
         sess = self._sessions.get(sig)
         if sess is None:
             sess = self._sessions[sig] = Orchestrator(
-                self.store, engine=engine, replication=replicate or None,
-                **engine_opts)
+                self.store, engine=engine, backend=backend,
+                replication=replicate or None, **engine_opts)
         return sess
 
     def session_report(self, engine: str = "tdorch", replicate=None,
-                       **engine_opts) -> SessionReport:
+                       backend=None, **engine_opts) -> SessionReport:
         """Accumulated cross-batch costs for the session keyed by `engine`
         (+the same opts the batches were run with)."""
-        return self.session(engine, replicate=replicate, **engine_opts).report
+        return self.session(engine, replicate=replicate, backend=backend,
+                            **engine_opts).report
 
     # ---- single-key batches ------------------------------------------------
     def execute_batch(
@@ -116,11 +139,13 @@ class DistributedHashTable:
         engine: str = "tdorch",
         origin: Optional[np.ndarray] = None,
         replicate=None,
+        backend=None,
         **engine_opts,
     ) -> KVResult:
         """Run one YCSB-style batch: GETs return values; UPDATEs write
         multiply-and-add results back. `replicate=` routes the batch through
-        the table's replicating session for this engine (see `session`)."""
+        the table's replicating session for this engine (see `session`);
+        `backend=` through its numpy-oracle or jitted-jax session."""
         n = keys.shape[0]
         keys = np.asarray(keys, dtype=np.int64)
         is_read = np.asarray(is_read, dtype=bool)
@@ -137,15 +162,10 @@ class DistributedHashTable:
             contexts=ctx, read_keys=keys, write_keys=write_keys, origin=origin
         )
 
-        def f(contexts: np.ndarray, in_vals: np.ndarray) -> Dict[str, np.ndarray]:
-            mul = contexts[:, 1:2]
-            add = contexts[:, 2:3]
-            updated = in_vals * mul + add  # the §4 multiply-and-add lambda
-            return {"update": updated, "result": in_vals}
-
         res: OrchestrationResult = self.session(
-            engine, replicate=replicate, **engine_opts
-        ).run_stage(tasks, f, write_back="write", return_results=True)
+            engine, replicate=replicate, backend=backend, **engine_opts
+        ).run_stage(tasks, _muladd_lambda, write_back="write",
+                    return_results=True)
         return KVResult(values=res.results, report=res.report, refcount=res.refcount)
 
     # ---- multi-get batches -------------------------------------------------
@@ -156,6 +176,7 @@ class DistributedHashTable:
         engine: str = "tdorch",
         origin: Optional[np.ndarray] = None,
         replicate=None,
+        backend=None,
         **engine_opts,
     ) -> MultiGetResult:
         """One ragged multi-get batch: task i fetches every key in
@@ -184,13 +205,10 @@ class DistributedHashTable:
         A = max(tasks.max_arity, 1)
         w = self.store.value_width
 
-        def f(contexts, vals, mask):
-            flat = vals.reshape(n, -1) if vals.ndim == 3 else vals
-            return {"result": flat}
-
-        res = self.session(engine, replicate=replicate, **engine_opts).run_stage(
-            tasks, f, write_back="add", return_results=True
-        )
+        res = self.session(
+            engine, replicate=replicate, backend=backend, **engine_opts
+        ).run_stage(tasks, _flatten_lambda, write_back="add",
+                    return_results=True)
         values = res.results.reshape(n, A, w) if A > 1 else res.results[:, None, :]
         if tasks.max_arity <= 1:
             mask = (tasks.arity > 0)[:, None]
