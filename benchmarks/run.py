@@ -7,6 +7,7 @@
     Tab. 3/4 bench_ablation   no-TD-Orch + T1/T2/T3 ablations
     (beyond) bench_skew       adaptive hot-chunk replication on vs off
     (beyond) bench_backend    numpy-oracle vs jitted-jax execution backend
+    (beyond) bench_plan       StagePlan-driven rounds vs per-stage run_stage
     (beyond) bench_moe        TD-Orch vs push/pull as the MoE dispatcher
     (beyond) bench_kernels    per-kernel microbenchmarks
 
@@ -22,14 +23,15 @@ import sys
 import time
 
 from . import (bench_ablation, bench_backend, bench_breakdown, bench_graph,
-               bench_kernels, bench_moe, bench_scaling, bench_skew,
-               bench_ycsb)
+               bench_kernels, bench_moe, bench_plan, bench_scaling,
+               bench_skew, bench_ycsb)
 from .common import print_csv, write_json
 
 SUITES = {
     "ycsb": bench_ycsb,
     "skew": bench_skew,
     "backend": bench_backend,
+    "plan": bench_plan,
     "graph": bench_graph,
     "scaling": bench_scaling,
     "breakdown": bench_breakdown,

@@ -6,13 +6,14 @@
 from .backend import JaxBackend, NumpyBackend, make_backend
 from .comm_forest import CommForest, theory_fanout
 from .cost import (CostAccumulator, PhaseCost, SessionReport, StageReport,
-                   assert_cost_parity)
+                   assert_cost_parity, assert_session_parity)
 from .datastore import DataStore, TaskBatch
 from .engine import OrchestrationResult, TDOrchEngine
 from .baselines import DirectPullEngine, DirectPushEngine, SortBasedEngine
 from .execution import gather_values
 from .interface import ENGINES, make_engine, orchestration, register_engine
 from .mergeops import MERGE_OPS, MergeOp, get_merge_op
+from .plan import CARRY, LoopRecord, PlanResult, PlanState, StagePlan
 from .replication import (HotChunkReplicator, ReplicaSet, ReplicationConfig,
                           make_replicator)
 from .session import Orchestrator
@@ -21,13 +22,14 @@ __all__ = [
     "JaxBackend", "NumpyBackend", "make_backend",
     "CommForest", "theory_fanout",
     "CostAccumulator", "PhaseCost", "SessionReport", "StageReport",
-    "assert_cost_parity",
+    "assert_cost_parity", "assert_session_parity",
     "DataStore", "TaskBatch",
     "OrchestrationResult", "TDOrchEngine",
     "DirectPullEngine", "DirectPushEngine", "SortBasedEngine",
     "gather_values",
     "ENGINES", "make_engine", "orchestration", "register_engine",
     "MERGE_OPS", "MergeOp", "get_merge_op",
+    "CARRY", "LoopRecord", "PlanResult", "PlanState", "StagePlan",
     "HotChunkReplicator", "ReplicaSet", "ReplicationConfig", "make_replicator",
     "Orchestrator",
 ]

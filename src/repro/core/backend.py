@@ -48,15 +48,40 @@ from .registry import get_backend_cls, register_backend
 _JAX_MERGES = ("add", "min", "max", "or", "write")
 
 
+def _bucket_rows(n: int) -> int:
+    """Bucketed batch size for plan-scope static shapes: the next power of
+    two (floored at 16). Multi-round plans whose batch sizes drift (BFS
+    frontiers) then land in O(log n) compiled executables instead of
+    re-jitting every round — padding rows are no-read/no-write tasks whose
+    elementwise cost is far below a recompile."""
+    if n <= 16:
+        return 16
+    return 1 << (int(n) - 1).bit_length()
+
+
 @register_backend("numpy")
 class NumpyBackend:
     """The reference oracle: the float64 pure-numpy pass, unchanged."""
 
     name = "numpy"
+    # host↔device state-array transfers (results / combined write-backs /
+    # plan flushes). Always 0 here — the oracle IS host-resident; the jax
+    # backend counts, and `benchmarks/bench_plan.py` reports syncs/round.
+    host_syncs = 0
+
+    # -- StagePlan device-residency hooks (no-ops for the host oracle) ------
+    def begin_plan(self, store) -> None:
+        """Enter a plan scope over `store` (see `core/plan.py`)."""
+
+    def end_plan(self) -> None:
+        """Leave the plan scope, flushing any deferred state."""
+
+    def plan_flush(self) -> None:
+        """Make the host store copy current (no-op when nothing deferred)."""
 
     # -- phase 3 -----------------------------------------------------------
-    def execute(self, tasks, store, f: Callable, merge: Optional[MergeOp] = None
-                ) -> Dict[str, Optional[np.ndarray]]:
+    def execute(self, tasks, store, f: Callable, merge: Optional[MergeOp] = None,
+                want_result: bool = True) -> Dict[str, Optional[np.ndarray]]:
         return execution.execute(tasks, store, f)
 
     # -- phase 4 -----------------------------------------------------------
@@ -121,6 +146,61 @@ class JaxBackend(NumpyBackend):
         self._host_lambdas: set = set()  # ids of fns proven untraceable
         self._stash = None  # one-slot (execute → apply_writes) carry
         self._route = None  # one-slot combine_by_key routing cache
+        # host↔device transfer counter (results / combined write-backs /
+        # plan flushes) — what bench_plan reports as syncs-per-round
+        self.host_syncs = 0
+        # StagePlan device-residency scope (core/plan.py): while a plan runs
+        # over `_plan_store`, write-backs stay on device and the host copy is
+        # refreshed lazily at flush points (before user callbacks, plan exit)
+        self._plan_store = None
+        self._plan_depth = 0
+        self._plan_written: list = []
+        self._plan_dirty = False
+
+    # -- StagePlan device-residency scope -----------------------------------
+    def begin_plan(self, store) -> None:
+        """Enter a plan scope: batches over `store` get bucketed static
+        shapes, and fused write-backs defer their host materialization."""
+        if self._plan_depth == 0:
+            self._plan_store = store
+        self._plan_depth += 1
+
+    def end_plan(self) -> None:
+        self._plan_depth = max(self._plan_depth - 1, 0)
+        if self._plan_depth == 0:
+            self.plan_flush()
+            self._plan_store = None
+
+    def plan_flush(self) -> None:
+        """Refresh the host store copy from the device-resident values: one
+        transfer covering every chunk written since the last flush. Called
+        by the plan runner before any user callback and at plan exit."""
+        if not self._plan_dirty:
+            return
+        store = self._plan_store
+        # under the plan-scope invariant this is a version-matching cache
+        # hit on the deferred device buffer (the deferred apply re-pins the
+        # cache after every touch())
+        dv = self._device_values(store)
+        wk = np.unique(np.concatenate(self._plan_written))
+        self._plan_written = []
+        self._plan_dirty = False
+        # bucket the gather shape (duplicate-pad with wk[0]) so per-round
+        # flushes of drifting write sets reuse one compiled gather instead
+        # of re-specializing XLA's eager gather every round
+        wk_pad = np.full(_bucket_rows(wk.size), wk[0], dtype=np.int64)
+        wk_pad[:wk.size] = wk
+        rows = np.asarray(dv[self._jnp.asarray(wk_pad)])[:wk.size].astype(
+            store.values.dtype, copy=False)
+        self.host_syncs += 1
+        store.write_rows(wk, rows)
+        self._remember_values(store, dv)
+
+    def _flush_if_deferred(self, store) -> None:
+        """Host code is about to read/write `store.values` directly: make
+        the host copy current first."""
+        if self._plan_store is store and self._plan_dirty:
+            self.plan_flush()
 
     # -- device-resident store values --------------------------------------
     def _device_values(self, store):
@@ -140,11 +220,12 @@ class JaxBackend(NumpyBackend):
         return self._jnp.asarray(np.asarray(arr).astype(np.int32, copy=False))
 
     # -- phase 3 (+ fused phase-4 ⊗) ---------------------------------------
-    def execute(self, tasks, store, f: Callable, merge: Optional[MergeOp] = None
-                ) -> Dict[str, Optional[np.ndarray]]:
+    def execute(self, tasks, store, f: Callable, merge: Optional[MergeOp] = None,
+                want_result: bool = True) -> Dict[str, Optional[np.ndarray]]:
         self._stash = None
         if tasks.n == 0 or id(f) in self._host_lambdas \
                 or store.num_keys >= 2**30:
+            self._flush_if_deferred(store)
             return execution.execute(tasks, store, f)
 
         n = tasks.n
@@ -163,7 +244,7 @@ class JaxBackend(NumpyBackend):
         if combine:
             uniq, seg_w = np.unique(tasks.write_keys[w_rows],
                                     return_inverse=True)
-            B = 1 << max(int(w_rows.size - 1).bit_length(), 4)
+            B = _bucket_rows(w_rows.size)
             w_idx = np.full(B, n, dtype=np.int32)
             w_idx[:w_rows.size] = w_rows
             seg = np.full(B, B, dtype=np.int32)
@@ -175,22 +256,41 @@ class JaxBackend(NumpyBackend):
             seg = order = w_idx
         merge_name = merge.name if combine else "add"
 
+        # plan scope: pad the batch to a bucketed static shape so rounds
+        # with drifting sizes share compiled executables. Padding rows read
+        # nothing, write nothing (never in w_idx), and are sliced off below
+        # — sound because tasks are independent lambda-tasks by the model.
+        # Flat batches only: a ragged batch's nnz-shaped CSR arrays are
+        # traced arguments too, so row padding alone cannot stop a re-jit
+        # and would just add copies.
+        n_pad = (_bucket_rows(n) if self._plan_store is store
+                 and tasks.max_arity <= 1 else n)
+
         dv = self._device_values(store)
-        ctx = self._jnp.asarray(
-            np.asarray(tasks.contexts).astype(self._np_dtype, copy=False))
+        ctx_np = np.asarray(tasks.contexts).astype(self._np_dtype, copy=False)
+        if n_pad != n:
+            pad = np.zeros((n_pad,) + ctx_np.shape[1:], dtype=self._np_dtype)
+            pad[:n] = ctx_np
+            ctx_np = pad
+        ctx = self._jnp.asarray(ctx_np)
         fwd = execution._accepts_mask(f)
         kw = dict(f=f, fwd_mask=fwd, merge_name=merge_name, combine=combine,
-                  want_update=want_update)
+                  want_update=want_update, want_result=want_result)
         try:
             if tasks.max_arity <= 1:
+                keys = tasks.read_keys
+                if n_pad != n:
+                    kp = np.full(n_pad, -1, dtype=np.int64)
+                    kp[:n] = keys
+                    keys = kp
                 out = self._jx.run_stage_flat(
-                    dv, self._di(tasks.read_keys), ctx, self._di(w_idx),
+                    dv, self._di(keys), ctx, self._di(w_idx),
                     self._di(seg), self._di(order), **kw)
             else:
                 row = tasks.pair_task
                 col = np.arange(tasks.nnz, dtype=np.int64) \
                     - tasks.read_indptr[:-1][row]
-                mask = np.zeros((n, tasks.max_arity), dtype=bool)
+                mask = np.zeros((n_pad, tasks.max_arity), dtype=bool)
                 mask[row, col] = True
                 out = self._jx.run_stage_ragged(
                     dv, self._di(tasks.read_indices), self._di(row),
@@ -201,12 +301,21 @@ class JaxBackend(NumpyBackend):
             # control flow, ...): route this function object to the oracle
             # path from now on — if it is genuinely broken it raises there
             self._host_lambdas.add(id(f))
+            self._flush_if_deferred(store)
             return execution.execute(tasks, store, f)
 
-        host: Dict[str, Optional[np.ndarray]] = {
-            key: (None if out.get(key) is None else np.asarray(out[key]))
-            for key in ("result", "update")
-        }
+        host: Dict[str, Optional[np.ndarray]] = {"result": None,
+                                                 "update": None}
+        res_dev = out.get("result")
+        if res_dev is not None:
+            host["result"] = np.asarray(
+                res_dev[:n] if n_pad != n else res_dev)
+            self.host_syncs += 1
+        upd_dev = out.get("update")
+        if upd_dev is not None:
+            host["update"] = np.asarray(
+                upd_dev[:n] if n_pad != n else upd_dev)
+            self.host_syncs += 1
         combined = out.get("combined")
         if combine and combined is not None:
             # the engines only ever hand `update` back to apply_writes, and
@@ -241,25 +350,36 @@ class JaxBackend(NumpyBackend):
                     "longer matches the fused combine). Pass the update "
                     "array through unchanged, or use backend='numpy' for "
                     "this engine.")
+            self._flush_if_deferred(store)
             execution.apply_writes(tasks, store, updates, merge, cost)
             return
         _, _, _, uniq, combined_dev, _, dv = stash
         if uniq.size == 0:
             return
-        # authoritative host apply (store dtype), exactly the oracle's ⊙
-        combined = np.asarray(combined_dev)[:uniq.size].astype(
-            store.values.dtype, copy=False)
-        store.write_rows(uniq, merge.apply(store.values[uniq], combined))
         cost.work(store.home[uniq], 1.0)
-        # keep the device copy in lock-step (no full re-upload next stage);
-        # padding keys are ascending out-of-range rows, so the scatter sees
-        # sorted unique indices and is dropped past num_keys
+        # device-side ⊙-apply (no full re-upload next stage); padding keys
+        # are ascending out-of-range rows, so the scatter sees sorted unique
+        # indices and is dropped past num_keys
         B = combined_dev.shape[0]
         uniq_pad = np.concatenate([
             uniq, np.arange(store.num_keys, store.num_keys + (B - uniq.size),
                             dtype=np.int64)])
         new_dv = self._jx.apply_rows(dv, self._di(uniq_pad), combined_dev,
                                      merge_name=merge.name)
+        if self._plan_store is store:
+            # plan scope: the write-back stays device-resident — the host
+            # copy is refreshed at the next flush point (before any user
+            # callback, or at plan exit), not per stage
+            store.touch()
+            self._remember_values(store, new_dv)
+            self._plan_written.append(uniq)
+            self._plan_dirty = True
+            return
+        # authoritative host apply (store dtype), exactly the oracle's ⊙
+        combined = np.asarray(combined_dev)[:uniq.size].astype(
+            store.values.dtype, copy=False)
+        self.host_syncs += 1
+        store.write_rows(uniq, merge.apply(store.values[uniq], combined))
         self._remember_values(store, new_dv)
 
     # -- phase 1 ------------------------------------------------------------
@@ -307,6 +427,7 @@ class JaxBackend(NumpyBackend):
                 dev = self._jx.sorted_segment_sum(
                     self._jnp.asarray(np.asarray(values).astype(
                         self._np_dtype, copy=False)), rt[1], rt[2])
+                self.host_syncs += 1
                 return rt[3].copy(), np.asarray(dev).astype(np.float64)
             self._route = (keys.copy(),)  # candidate; build routing if seen again
         return super().combine_by_key(values, keys, num_keys, merge, order)

@@ -84,7 +84,8 @@ class DirectPullEngine:
         cost.end()
 
         cost.begin("pull_execute")
-        out = self.backend.execute(tasks, store, f, merge)
+        out = self.backend.execute(tasks, store, f, merge,
+                                   want_result=return_results)
         cost.work(tasks.origin, self.work_per_task)
         cost.end()
         # results already live at the task's origin machine — no return traffic
@@ -168,7 +169,8 @@ class DirectPushEngine:
         cost.end()
 
         cost.begin("push_execute")
-        out = self.backend.execute(tasks, store, f, merge)
+        out = self.backend.execute(tasks, store, f, merge,
+                                   want_result=return_results)
         cost.work(exec_site, self.work_per_task)
         results = out.get("result")
         if return_results and results is not None:
@@ -248,7 +250,8 @@ class SortBasedEngine:
         cost.end()
 
         cost.begin("sort_execute")
-        out = self.backend.execute(tasks, store, f, merge)
+        out = self.backend.execute(tasks, store, f, merge,
+                                   want_result=return_results)
         cost.work(sorted_machine, self.work_per_task)
         cost.end()
 

@@ -224,6 +224,21 @@ def assert_cost_parity(a: "StageReport", b: "StageReport") -> None:
                 f"{pa.name}: per-machine {field} differ ({va} vs {vb})"
 
 
+def assert_session_parity(a: "SessionReport", b: "SessionReport") -> None:
+    """Session-level parity: same number of stages, and every stage's
+    per-phase words/rounds/work bit-identical. This is what pins a
+    plan-driven run against its hand-rolled `run_stage`/`edge_map` loop
+    (`tests/test_plan.py`): the StagePlan runner must hit the session's
+    entry points in exactly the same order with exactly the same batches."""
+    assert a.num_stages == b.num_stages, \
+        f"stage counts differ: {a.num_stages} vs {b.num_stages}"
+    for i, (sa, sb) in enumerate(zip(a.stages, b.stages)):
+        try:
+            assert_cost_parity(sa, sb)
+        except AssertionError as e:
+            raise AssertionError(f"stage {i}: {e}") from None
+
+
 @dataclasses.dataclass
 class SessionReport:
     """Cross-stage cost accumulation for one `Orchestrator` session.

@@ -160,6 +160,82 @@ class TaskBatch:
     def n(self) -> int:
         return self.contexts.shape[0]
 
+    # ---- fail-fast validation --------------------------------------------
+    def validate(self, store: "DataStore | None" = None, *,
+                 num_keys: int | None = None,
+                 num_machines: int | None = None) -> "TaskBatch":
+        """Check the batch's CSR geometry and key/machine ranges, raising
+        `ValueError` with an actionable message instead of letting a
+        malformed batch surface as a cryptic numpy index error deep inside
+        an engine. Called by `Orchestrator.run_stage` on every batch (cheap,
+        vectorized); re-checks constructor invariants too, since the arrays
+        are plain ndarrays a caller may have mutated since `__init__`.
+
+        `store` (or explicit `num_keys`/`num_machines`) supplies the bounds;
+        without either, only the store-independent geometry is checked.
+        Returns the batch so call sites can chain it.
+        """
+        if store is not None:
+            num_keys = store.num_keys if num_keys is None else num_keys
+            num_machines = store.P if num_machines is None else num_machines
+        n = self.n
+        indptr, indices = self.read_indptr, self.read_indices
+        if indptr.shape[0] != n + 1:
+            raise ValueError(
+                f"TaskBatch.read_indptr has {indptr.shape[0]} entries for a "
+                f"batch of {n} tasks — a CSR row-pointer array needs n+1 "
+                f"= {n + 1}")
+        if indptr[0] != 0 or indptr[-1] != indices.shape[0]:
+            raise ValueError(
+                f"TaskBatch.read_indptr must run from 0 to nnz "
+                f"({indices.shape[0]}), got [{indptr[0]} .. {indptr[-1]}] — "
+                "the pointer array does not cover read_indices")
+        steps = np.diff(indptr)
+        if (steps < 0).any():
+            t = int(np.flatnonzero(steps < 0)[0])
+            raise ValueError(
+                f"TaskBatch.read_indptr must be non-decreasing: task {t} has "
+                f"indptr[{t}]={int(indptr[t])} > indptr[{t + 1}]="
+                f"{int(indptr[t + 1])} — each task's key slice must follow "
+                "the previous one")
+        for arr, nm in [(self.origin, "origin"), (self.write_keys,
+                        "write_keys"), (self.priority, "priority")]:
+            if arr.shape[0] != n:
+                raise ValueError(
+                    f"TaskBatch.{nm} has {arr.shape[0]} entries for a batch "
+                    f"of {n} tasks — every per-task array must have length n")
+        if indices.size and (indices < 0).any():
+            p = int(np.flatnonzero(indices < 0)[0])
+            raise ValueError(
+                f"TaskBatch.read_indices[{p}] = {int(indices[p])} is "
+                "negative — requested chunk keys must be >= 0 (omit a task's "
+                "reads by giving it an empty CSR slice, not a sentinel)")
+        if (self.write_keys < -1).any():
+            t = int(np.flatnonzero(self.write_keys < -1)[0])
+            raise ValueError(
+                f"TaskBatch.write_keys[{t}] = {int(self.write_keys[t])} is "
+                "invalid — use -1 for 'writes nothing', >= 0 for a chunk key")
+        if num_keys is not None:
+            if indices.size and (indices >= num_keys).any():
+                p = int(np.flatnonzero(indices >= num_keys)[0])
+                raise ValueError(
+                    f"TaskBatch.read_indices[{p}] = {int(indices[p])} is out "
+                    f"of range for a store with {num_keys} chunks (task "
+                    f"{int(np.searchsorted(indptr, p, side='right')) - 1})")
+            if (self.write_keys >= num_keys).any():
+                t = int(np.flatnonzero(self.write_keys >= num_keys)[0])
+                raise ValueError(
+                    f"TaskBatch.write_keys[{t}] = {int(self.write_keys[t])} "
+                    f"is out of range for a store with {num_keys} chunks")
+        if num_machines is not None and self.origin.size:
+            bad = (self.origin < 0) | (self.origin >= num_machines)
+            if bad.any():
+                t = int(np.flatnonzero(bad)[0])
+                raise ValueError(
+                    f"TaskBatch.origin[{t}] = {int(self.origin[t])} is not a "
+                    f"machine id in [0, {num_machines})")
+        return self
+
     # ---- ragged-read geometry --------------------------------------------
     @property
     def arity(self) -> np.ndarray:

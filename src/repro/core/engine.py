@@ -173,7 +173,11 @@ class TDOrchEngine:
 
         # ---------------- Phase 3: execution -------------------------------
         cost.begin("phase3_execute")
-        out = self.backend.execute(tasks, store, f, merge)
+        # want_result lets a device backend skip materializing per-task
+        # results the caller never asked for (a StagePlan round's only host
+        # traffic is then the write-back / flush path)
+        out = self.backend.execute(tasks, store, f, merge,
+                                   want_result=return_results)
         updates = out.get("update")
         results = out.get("result")
         cost.work(exec_site, self.work_per_task)

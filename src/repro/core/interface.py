@@ -9,12 +9,20 @@ CSR — or the flat `read_keys` convenience for arity-1 batches; OutputPointers
 names a merge-able ⊕ (Definition 2). The `engine` kwarg selects the
 scheduling strategy — "tdorch" (ours) or a §2.3 baseline, via the
 `@register_engine` registry — without touching user code, which is the point
-of the abstraction.
+of the abstraction. `return_results=True` ships each task's per-task result
+back to its origin (and is what makes a device backend materialize results
+at all); it forwards unchanged to the engine. Session-level options ride the
+same call: `backend="numpy" | "jax"` picks the numeric execution backend
+(cost reports are bit-identical across backends) and `replication=` opts
+into the adaptive hot-chunk subsystem — both forward to the underlying
+`Orchestrator`.
 
 `orchestration()` is the one-shot shim: it builds a throwaway `Orchestrator`
 session per call. Workloads that chain stages (graph rounds, kv batches)
-should construct an `Orchestrator` once and call `run_stage` so the
-`CommForest` is built a single time and costs accumulate per session.
+should construct an `Orchestrator` once: `run_stage` chains stages against
+one CommForest and an accumulating `SessionReport`, and `run_plan` executes
+a declarative multi-round `StagePlan` (task-emitting continuations, fixpoint
+loops — see `core/plan.py`) in a single call.
 """
 from __future__ import annotations
 
@@ -27,11 +35,12 @@ from . import baselines as _baselines  # noqa: F401
 from . import engine as _engine  # noqa: F401
 from .datastore import DataStore, TaskBatch
 from .engine import OrchestrationResult
+from .plan import CARRY, PlanResult, StagePlan
 from .registry import ENGINES, make_engine, register_engine
 from .session import Orchestrator
 
 __all__ = ["ENGINES", "make_engine", "register_engine", "orchestration",
-           "Orchestrator"]
+           "Orchestrator", "StagePlan", "CARRY", "PlanResult"]
 
 
 def orchestration(
@@ -42,8 +51,11 @@ def orchestration(
     *,
     engine: str = "tdorch",
     return_results: bool = False,
+    backend=None,
+    replication=None,
     **engine_opts,
 ) -> OrchestrationResult:
-    sess = Orchestrator(store, engine=engine, **engine_opts)
+    sess = Orchestrator(store, engine=engine, backend=backend,
+                        replication=replication, **engine_opts)
     return sess.run_stage(tasks, f, write_back=write_back,
                           return_results=return_results)

@@ -131,11 +131,13 @@ def _as_update_rows(upd, n: int, dtype):
 # Phase 3 + 4 fused: gather → lambda → writer-compact ⊗-combine, one dispatch
 # ---------------------------------------------------------------------------
 def _finish_stage(out, values, w_idx, seg, order, *, merge_name: str,
-                  combine: bool, want_update: bool):
+                  combine: bool, want_update: bool, want_result: bool):
     """Shared tail of the fused stage: coerce the lambda output, ⊗-combine
     the writer rows (compacted through `w_idx` so combine cost scales with
     writers, not batch size), and drop what the host did not ask for — XLA
-    dead-code-eliminates everything feeding an unreturned output."""
+    dead-code-eliminates everything feeding an unreturned output (with
+    `want_result=False` the per-task results are never even computed, so a
+    StagePlan round pays no result transfer at all)."""
     out = dict(out) if out is not None else {}
     upd = out.get("update")
     combined = None
@@ -143,16 +145,16 @@ def _finish_stage(out, values, w_idx, seg, order, *, merge_name: str,
         u = _as_update_rows(upd, values.shape[0], values.dtype)
         uw = u[jnp.clip(w_idx, 0, u.shape[0] - 1)]
         combined = _segment_combine(uw, seg, w_idx.shape[0], merge_name, order)
-    return {"result": out.get("result"),
+    return {"result": out.get("result") if want_result else None,
             "update": upd if want_update else None,
             "combined": combined}
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "f", "fwd_mask", "merge_name", "combine", "want_update"))
+    "f", "fwd_mask", "merge_name", "combine", "want_update", "want_result"))
 def run_stage_flat(values, keys, contexts, w_idx, seg, order, *, f,
                    fwd_mask: bool, merge_name: str, combine: bool,
-                   want_update: bool):
+                   want_update: bool, want_result: bool = True):
     """Arity-≤1 stage numerics: gather each task's chunk (zeros where it
     reads nothing), run the lambda, ⊗-combine its writers' updates.
     `w_idx` (B,) lists writer task rows padded with n to a bucket size B;
@@ -164,14 +166,14 @@ def run_stage_flat(values, keys, contexts, w_idx, seg, order, *, f,
     out = f(contexts, gathered, has) if fwd_mask else f(contexts, gathered)
     return _finish_stage(out, gathered, w_idx, seg, order,
                          merge_name=merge_name, combine=combine,
-                         want_update=want_update)
+                         want_update=want_update, want_result=want_result)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "f", "fwd_mask", "merge_name", "combine", "want_update"))
+    "f", "fwd_mask", "merge_name", "combine", "want_update", "want_result"))
 def run_stage_ragged(values, read_indices, row, col, mask, contexts, w_idx,
                      seg, order, *, f, fwd_mask: bool, merge_name: str,
-                     combine: bool, want_update: bool):
+                     combine: bool, want_update: bool, want_result: bool = True):
     """Ragged (multi-get) stage numerics: padded `(n, max_arity, w)` gather
     plus validity mask, then lambda + writer ⊗-combine as in
     `run_stage_flat`."""
@@ -182,10 +184,16 @@ def run_stage_ragged(values, read_indices, row, col, mask, contexts, w_idx,
     out = f(contexts, gathered, mask) if fwd_mask else f(contexts, gathered)
     return _finish_stage(out, gathered.reshape(n, A * w), w_idx, seg, order,
                          merge_name=merge_name, combine=combine,
-                         want_update=want_update)
+                         want_update=want_update, want_result=want_result)
 
 
-@functools.partial(jax.jit, static_argnames=("merge_name",))
+# donate the store buffer into the ⊙-apply where the platform supports
+# in-place donation (accelerators); CPU XLA would only log donation warnings
+_APPLY_DONATE = () if jax.default_backend() == "cpu" else (0,)
+
+
+@functools.partial(jax.jit, static_argnames=("merge_name",),
+                   donate_argnums=_APPLY_DONATE)
 def apply_rows(values, uniq_padded, combined, *, merge_name: str):
     """⊙-apply combined updates to the device-resident store copy.
     `uniq_padded` is the sorted written-key list padded with ascending

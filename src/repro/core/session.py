@@ -109,6 +109,7 @@ class Orchestrator:
     ) -> OrchestrationResult:
         """Run one orchestration stage against the session's store and fold
         its cost report into the session report."""
+        tasks.validate(self.store)
         extra: Dict[str, object] = {}
         ref_report: Optional[StageReport] = None
         if self.replicator is not None:
@@ -133,6 +134,25 @@ class Orchestrator:
                                      ref_report.phases + res.report.phases)
         self._report.add(res.report)
         return res
+
+    # ------------------------------------------------------------------
+    def run_plan(self, plan, *, carry=None, state=None):
+        """Execute a declarative `StagePlan` (core/plan.py) — the whole
+        multi-round program in one call against this session.
+
+        `carry` seeds the plan's continuation slot (the first round's
+        `TaskBatch` for CARRY-consuming stages); `state` seeds user slots on
+        the threaded `PlanState`. Stage-by-stage this calls `run_stage`
+        exactly as a hand-rolled driver loop would — per-phase cost reports
+        are bit-identical — but on the jax backend the plan runs inside a
+        device-residency scope: write-backs stay on device, the host store
+        copy is refreshed only at flush points (before user callbacks, at
+        plan exit), and batch shapes are bucketed against re-jitting.
+        Returns a `PlanResult` (records, per-loop rounds/stop reasons,
+        final state).
+        """
+        from .plan import execute_plan  # local: plan.py is engine-agnostic
+        return execute_plan(self, plan, carry=carry, state=state)
 
     def reset_report(self) -> SessionReport:
         """Detach and return the accumulated report, starting a fresh one."""

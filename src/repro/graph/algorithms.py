@@ -1,9 +1,21 @@
-"""The five §5 graph algorithms on DISTEDGEMAP: BFS, SSSP, BC, CC, PR.
+"""The five §5 graph algorithms on DISTEDGEMAP: BFS, SSSP, BC, CC, PR —
+each expressed as a declarative `StagePlan` (repro.core.plan) over
+`dist_edge_map`.
 
 Each follows the paper's pseudocode (Algorithm 2 for BFS, Algorithm 3 for
 BC) and inherits TDO-GP's bounds (Table 1): work-efficient O((n+m)/P·…)
 computation with communication a log_{n/P}P factor above it, because every
 round is a TD-Orch-orchestrated stage over the ingestion-time trees.
+
+The drivers used to hand-roll a Python `while not frontier.is_empty` loop
+per algorithm; now each builds a plan — a per-round body factory (the
+lambdas close over round-local values exactly as before) inside
+`loop(until="empty" | <predicate>, max_rounds=...)` — and hands the whole
+program to `GraphSession.run_plan`, which carries the emitted next frontier
+between rounds inside the framework. Round-by-round the plan hits
+`session.edge_map` with the same arguments the old loops did, so per-round
+stats and per-phase cost reports are bit-identical (`tests/test_plan.py`
+pins this against hand-rolled reference loops).
 
 All drivers return (values, RunInfo) where RunInfo carries per-round
 EdgeMapStats so benchmarks can report comm/compute/overhead breakdowns
@@ -17,6 +29,7 @@ from typing import List, Optional
 import numpy as np
 
 from ..core.cost import SessionReport
+from ..core.plan import CARRY, StagePlan
 from .distedgemap import EdgeMapStats
 from .partition import OrchestratedGraph
 from .session import GraphSession
@@ -83,13 +96,11 @@ def bfs(og: OrchestratedGraph, source: int, **kw):
     sess, em_opts = _session(og, kw)
     dist = np.full(n, -1, dtype=np.int64)
     dist[source] = 0
-    frontier = DistVertexSubset.single(n, source)
-    stats: List[EdgeMapStats] = []
-    rnd = 0
-    while not frontier.is_empty:
-        rnd += 1
 
-        def f(s, d, w, _r=rnd):
+    def round_body(state):
+        _r = state.round + 1
+
+        def f(s, d, w):
             return np.full(s.size, float(_r))
 
         def wb(vs, agg):
@@ -97,11 +108,13 @@ def bfs(og: OrchestratedGraph, source: int, **kw):
             dist[vs[fresh]] = agg[fresh].astype(np.int64)
             return fresh
 
-        frontier, st = sess.edge_map(
-            frontier, f, wb, "max", filter_dst=lambda d: dist[d] == -1,
-            **em_opts)
-        stats.append(st)
-    return dist, RunInfo(rnd, stats, sess.report)
+        return StagePlan().edge_map(CARRY, f, wb, "max",
+                                    filter_dst=lambda d: dist[d] == -1,
+                                    **em_opts)
+
+    plan = StagePlan("bfs").loop(round_body, until="empty")
+    out = sess.run_plan(plan, carry=DistVertexSubset.single(n, source))
+    return dist, RunInfo(out.rounds, out.stats, sess.report)
 
 
 # ---------------------------------------------------------------------------
@@ -113,12 +126,8 @@ def sssp(og: OrchestratedGraph, source: int, **kw):
     sess, em_opts = _session(og, kw)
     dist = np.full(n, np.inf)
     dist[source] = 0.0
-    frontier = DistVertexSubset.single(n, source)
-    stats: List[EdgeMapStats] = []
-    rnd = 0
-    while not frontier.is_empty:
-        rnd += 1
 
+    def round_body(state):
         def f(s, d, w):
             return dist[s] + w
 
@@ -127,11 +136,14 @@ def sssp(og: OrchestratedGraph, source: int, **kw):
             dist[vs[better]] = agg[better]
             return better
 
-        frontier, st = sess.edge_map(frontier, f, wb, "min", **em_opts)
-        stats.append(st)
-        if rnd > og.n + 1:  # negative-cycle guard (shouldn't trigger)
-            raise RuntimeError("SSSP failed to converge")
-    return dist, RunInfo(rnd, stats, sess.report)
+        return StagePlan().edge_map(CARRY, f, wb, "min", **em_opts)
+
+    plan = StagePlan("sssp").loop(round_body, until="empty",
+                                  max_rounds=og.n + 2)
+    out = sess.run_plan(plan, carry=DistVertexSubset.single(n, source))
+    if out.rounds > og.n + 1:  # negative-cycle guard (shouldn't trigger)
+        raise RuntimeError("SSSP failed to converge")
+    return dist, RunInfo(out.rounds, out.stats, sess.report)
 
 
 # ---------------------------------------------------------------------------
@@ -140,12 +152,8 @@ def cc(og: OrchestratedGraph, **kw):
     n = og.n
     sess, em_opts = _session(og, kw)
     labels = np.arange(n, dtype=np.float64)
-    frontier = DistVertexSubset.full(n)
-    stats: List[EdgeMapStats] = []
-    rnd = 0
-    while not frontier.is_empty:
-        rnd += 1
 
+    def round_body(state):
         def f(s, d, w):
             return labels[s]
 
@@ -154,28 +162,34 @@ def cc(og: OrchestratedGraph, **kw):
             labels[vs[better]] = agg[better]
             return better
 
-        frontier, st = sess.edge_map(frontier, f, wb, "min", **em_opts)
-        stats.append(st)
-    return labels.astype(np.int64), RunInfo(rnd, stats, sess.report)
+        return StagePlan().edge_map(CARRY, f, wb, "min", **em_opts)
+
+    plan = StagePlan("cc").loop(round_body, until="empty")
+    out = sess.run_plan(plan, carry=DistVertexSubset.full(n))
+    return labels.astype(np.int64), RunInfo(out.rounds, out.stats, sess.report)
 
 
 # ---------------------------------------------------------------------------
 def pagerank(og: OrchestratedGraph, alpha: float = 0.85, tol: float = 1e-8,
              max_iter: int = 100, **kw):
     """Power iteration; merge = add. Dangling mass redistributed uniformly
-    (networkx convention, so oracles agree exactly)."""
+    (networkx convention, so oracles agree exactly).
+
+    A fixpoint plan with a convergence predicate: the body factory does the
+    per-round host prep (contributions, teleport base), the `until`
+    callback folds the new ranks in and reports the L1 delta."""
     n = og.n
     force_mode = kw.pop("force_mode", "dense")
     sess, em_opts = _session(og, kw)
     deg = og.out_degree().astype(np.float64)
-    pr = np.full(n, 1.0 / n)
     dangling = deg == 0
     frontier = DistVertexSubset.full(n)
-    stats: List[EdgeMapStats] = []
-    it = 0
-    for it in range(1, max_iter + 1):
+
+    def round_body(state):
+        pr = state["pr"]
         contrib = np.divide(pr, deg, out=np.zeros(n), where=deg > 0)
         nxt = np.full(n, (1.0 - alpha) / n + alpha * pr[dangling].sum() / n)
+        state["nxt"] = nxt
 
         def f(s, d, w):
             return contrib[s]
@@ -184,72 +198,94 @@ def pagerank(og: OrchestratedGraph, alpha: float = 0.85, tol: float = 1e-8,
             nxt[vs] += alpha * agg
             return np.ones(vs.size, dtype=bool)
 
-        _, st = sess.edge_map(frontier, f, wb, "add", force_mode=force_mode,
-                              **em_opts)
-        stats.append(st)
-        delta = np.abs(nxt - pr).sum()
-        pr = nxt
-        if delta < tol * n:
-            break
-    return pr, RunInfo(it, stats, sess.report)
+        return StagePlan().edge_map(frontier, f, wb, "add",
+                                    force_mode=force_mode, **em_opts)
+
+    def converged(state):
+        delta = np.abs(state["nxt"] - state["pr"]).sum()
+        state["pr"] = state["nxt"]
+        return delta < tol * n
+
+    plan = StagePlan("pagerank").loop(round_body, until=converged,
+                                      max_rounds=max_iter)
+    out = sess.run_plan(plan, state={"pr": np.full(n, 1.0 / n)})
+    return out.state["pr"], RunInfo(out.rounds, out.stats, sess.report)
 
 
 # ---------------------------------------------------------------------------
 def bc(og: OrchestratedGraph, source: int, **kw):
     """Betweenness centrality from one root (Algorithm 3): forward
     level-synchronous σ accumulation, then backward dependency propagation
-    using the 1/σ trick (lines 27–34): δ_v = σ_v·φ_v − 1."""
+    using the 1/σ trick (lines 27–34): δ_v = σ_v·φ_v − 1.
+
+    Two chained fixpoint loops in one plan, with a host step between them
+    (the 1/σ inversion) — the backward loop's round bound (`last − 1`) is
+    resolved at loop entry from the state the forward loop recorded."""
     n = og.n
     sess, em_opts = _session(og, kw)
     num_paths = np.zeros(n)
     rounds_arr = np.zeros(n, dtype=np.int64)
     num_paths[source] = 1.0
     rounds_arr[source] = 1
-    frontier = DistVertexSubset.single(n, source)
-    frontiers = {1: frontier}
-    stats: List[EdgeMapStats] = []
-    rnd = 1
+    frontiers = {1: DistVertexSubset.single(n, source)}
+    phi = np.zeros(n)
+
     # ---- forward pass
-    while not frontier.is_empty:
-        rnd += 1
+    def fwd_body(state):
+        _r = state.round + 2  # the old driver's rnd counter (starts at 2)
 
         def f(s, d, w):
             return num_paths[s]
 
-        def wb(vs, agg, _r=rnd):
+        def wb(vs, agg):
             fresh = rounds_arr[vs] == 0
             num_paths[vs[fresh]] += agg[fresh]
             rounds_arr[vs[fresh]] = _r
             return fresh
 
-        frontier, st = sess.edge_map(
-            frontier, f, wb, "add", filter_dst=lambda d: rounds_arr[d] == 0,
-            **em_opts)
-        stats.append(st)
-        if not frontier.is_empty:
-            frontiers[rnd] = frontier
-    last = max(frontiers)
-    # ---- backward pass (lines 27–32)
-    visited = rounds_arr > 0
-    phi = np.zeros(n)
-    phi[visited] = 1.0 / num_paths[visited]
-    for r in range(last, 1, -1):
-        fr = frontiers[r]
+        def record(st, nxt):
+            if not nxt.is_empty:
+                frontiers[_r] = nxt
+            return nxt
+
+        return StagePlan().edge_map(
+            CARRY, f, wb, "add", filter_dst=lambda d: rounds_arr[d] == 0,
+            emit=record, **em_opts)
+
+    # ---- line 27: φ_v = 1/σ_v on visited vertices
+    def prepare_backward(state):
+        state["last"] = max(frontiers)
+        visited = rounds_arr > 0
+        phi[visited] = 1.0 / num_paths[visited]
+
+    # ---- backward pass (lines 27–32): r = last, last-1, ..., 2
+    def bwd_body(state):
+        _r = state["last"] - state.round
+        fr = frontiers[_r]
 
         def f(s, d, w):
             return phi[s]
 
-        def wb(vs, agg, _r=r):
+        def wb(vs, agg):
             sel = rounds_arr[vs] == _r - 1
             phi[vs[sel]] += agg[sel]
             return sel
 
-        _, st = sess.edge_map(
-            fr, f, wb, "add", filter_dst=lambda d, _r=r: rounds_arr[d] == _r - 1,
-            **em_opts)
-        stats.append(st)
+        return StagePlan().edge_map(
+            fr, f, wb, "add",
+            filter_dst=lambda d: rounds_arr[d] == _r - 1, **em_opts)
+
+    plan = (StagePlan("bc")
+            .loop(fwd_body, until="empty", name="forward")
+            .host(prepare_backward)
+            .loop(bwd_body, until=None,
+                  max_rounds=lambda st: st["last"] - 1, name="backward"))
+    out = sess.run_plan(plan, carry=frontiers[1])
+    last = out.state["last"]
+    fwd_rounds = out.loops[0].rounds
     # ---- line 34: δ_v = σ_v·φ_v − 1 on visited vertices (0 elsewhere)
+    visited = rounds_arr > 0
     delta = np.zeros(n)
     delta[visited] = phi[visited] * num_paths[visited] - 1.0
     delta[source] = 0.0
-    return delta, RunInfo(rnd + last - 1, stats, sess.report)
+    return delta, RunInfo(fwd_rounds + 1 + last - 1, out.stats, sess.report)

@@ -173,6 +173,20 @@ class GraphSession:
             self._report.add(st.report)
         return nxt, st
 
+    # ------------------------------------------------------------------
+    def run_plan(self, plan, *, carry=None, state=None):
+        """Execute a declarative `StagePlan` (repro.core.plan) of
+        `edge_map` rounds against this session — the whole frontier-driven
+        algorithm in one call, with the next frontier carried between rounds
+        by the framework. Round-by-round this calls `edge_map` exactly as a
+        hand-rolled driver loop would, so per-round stats and per-phase cost
+        reports are bit-identical (the five `graph.algorithms` drivers are
+        such plans). `carry` seeds the first frontier; `state` seeds user
+        slots. Returns a `PlanResult`.
+        """
+        from ..core.plan import execute_plan  # local: avoids import cycle
+        return execute_plan(self, plan, carry=carry, state=state)
+
     def reset_report(self) -> SessionReport:
         out, self._report = self._report, SessionReport(self.og.P)
         self.stats = []

@@ -17,12 +17,12 @@ batch, so chained same-key updates belong to later batches.)
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core import (DataStore, OrchestrationResult, Orchestrator,
-                    ReplicationConfig, SessionReport, TaskBatch)
+from ..core import (CARRY, DataStore, OrchestrationResult, Orchestrator,
+                    ReplicationConfig, SessionReport, StagePlan, TaskBatch)
 
 
 def _muladd_lambda(contexts: np.ndarray, in_vals: np.ndarray) -> Dict[str, np.ndarray]:
@@ -65,6 +65,18 @@ class MultiGetResult:
     mask: np.ndarray  # (n, max_arity) True where a slot holds a requested key
     report: object  # StageReport
     refcount: Dict[int, int]
+
+
+@dataclasses.dataclass
+class ChainResult:
+    """A `run_chain` outcome: per-task, per-hop fetched (pre-update) values
+    and the key each hop touched (-1 / NaN where a task's chain had already
+    ended)."""
+
+    values: np.ndarray  # (n, hops, value_width) fetched values per hop
+    keys: np.ndarray  # (n, hops) key touched per hop, -1 = chain ended
+    hops: int  # rounds actually executed
+    reports: List[object]  # per-hop StageReports, in order
 
 
 class DistributedHashTable:
@@ -130,6 +142,29 @@ class DistributedHashTable:
                             **engine_opts).report
 
     # ---- single-key batches ------------------------------------------------
+    def _make_batch(self, keys: np.ndarray, is_read: np.ndarray,
+                    operand: np.ndarray,
+                    origin: Optional[np.ndarray]) -> TaskBatch:
+        """The §4 GET/UPDATE TaskBatch — the one construction `execute_batch`
+        and every `run_chain` hop share, so plan-driven chains are
+        batch-for-batch identical to a hand-rolled loop over
+        `execute_batch`."""
+        n = keys.shape[0]
+        keys = np.asarray(keys, dtype=np.int64)
+        is_read = np.asarray(is_read, dtype=bool)
+        if origin is None:
+            origin = TaskBatch.even_origins(n, self.P)
+        # context = (is_read_flag, multiplier, addend): σ = 3 words
+        ctx = np.concatenate(
+            [is_read[:, None].astype(np.float64),
+             np.asarray(operand, dtype=np.float64)],
+            axis=1,
+        )
+        # UPDATE tasks write back to their key; GETs write nowhere (-1)
+        write_keys = np.where(is_read, np.int64(-1), keys)
+        return TaskBatch(contexts=ctx, read_keys=keys, write_keys=write_keys,
+                         origin=origin)
+
     def execute_batch(
         self,
         keys: np.ndarray,
@@ -146,27 +181,94 @@ class DistributedHashTable:
         multiply-and-add results back. `replicate=` routes the batch through
         the table's replicating session for this engine (see `session`);
         `backend=` through its numpy-oracle or jitted-jax session."""
-        n = keys.shape[0]
-        keys = np.asarray(keys, dtype=np.int64)
-        is_read = np.asarray(is_read, dtype=bool)
-        if origin is None:
-            origin = TaskBatch.even_origins(n, self.P)
-        # context = (is_read_flag, multiplier, addend): σ = 3 words
-        ctx = np.concatenate(
-            [is_read[:, None].astype(np.float64), np.asarray(operand, dtype=np.float64)],
-            axis=1,
-        )
-        # UPDATE tasks write back to their key; GETs write nowhere (-1)
-        write_keys = np.where(is_read, np.int64(-1), keys)
-        tasks = TaskBatch(
-            contexts=ctx, read_keys=keys, write_keys=write_keys, origin=origin
-        )
-
+        tasks = self._make_batch(keys, is_read, operand, origin)
         res: OrchestrationResult = self.session(
             engine, replicate=replicate, backend=backend, **engine_opts
         ).run_stage(tasks, _muladd_lambda, write_back="write",
                     return_results=True)
         return KVResult(values=res.results, report=res.report, refcount=res.refcount)
+
+    # ---- dependent read-modify-write chains --------------------------------
+    def run_chain(
+        self,
+        keys: np.ndarray,
+        operand: np.ndarray,
+        *,
+        follow=None,
+        max_hops: Optional[int] = None,
+        engine: str = "tdorch",
+        replicate=None,
+        backend=None,
+        **engine_opts,
+    ) -> ChainResult:
+        """YCSB-style dependent read-modify-write chains as ONE `StagePlan`:
+        hop j applies the §4 multiply-and-add update to each live task's
+        current key, then the framework emits hop j+1's `TaskBatch` — from
+        the next column of a `(n, hops)` key matrix, or from
+        ``follow(fetched_values) -> next_keys`` (−1 ends a task's chain) for
+        value-dependent chases (pointer chasing, secondary-index hops).
+
+        Pre-plan, this workload hand-rolled a driver loop over
+        `execute_batch` with a host sync per hop; the plan form runs the
+        whole chain against the table's cached session in one call, with
+        identical batches (and so bit-identical per-phase cost reports).
+
+        `keys`: either `(n, hops)` — every task's key sequence up front — or
+        `(n,)` first keys with `follow=` + `max_hops=`. `operand` is the
+        `(n, 2)` (multiplier, addend) pair applied at every hop.
+        """
+        keys = np.asarray(keys, dtype=np.int64)
+        operand = np.asarray(operand, dtype=np.float64)
+        if keys.ndim == 2:
+            if follow is not None:
+                raise ValueError(
+                    "pass either a (n, hops) key matrix or follow=, not both")
+            depth = keys.shape[1]
+            first = keys[:, 0]
+        else:
+            if follow is None or max_hops is None:
+                raise ValueError(
+                    "1-D first keys need follow= and max_hops= to bound the "
+                    "chase")
+            depth = int(max_hops)
+            first = keys
+        n = first.shape[0]
+        w = self.store.value_width
+        fetched = np.full((n, depth, w), np.nan)
+        touched = np.full((n, depth), -1, dtype=np.int64)
+        sess = self.session(engine, replicate=replicate, backend=backend,
+                            **engine_opts)
+
+        def emit(state, res):
+            j = state.round
+            alive = state["alive"]
+            fetched[alive, j] = res.results
+            touched[alive, j] = state["keys"]
+            if j + 1 >= depth:
+                return None
+            if follow is None:
+                nk = keys[alive, j + 1]
+            else:
+                nk = np.asarray(follow(res.results), dtype=np.int64)
+            keep = nk >= 0
+            if not keep.any():
+                return None
+            state["alive"] = alive = alive[keep]
+            state["keys"] = nk = nk[keep]
+            live = np.zeros(nk.size, dtype=bool)
+            return self._make_batch(nk, live, operand[alive], None)
+
+        plan = StagePlan("kv-chain").loop(
+            StagePlan().stage(CARRY, _muladd_lambda, "write", emit=emit,
+                              return_results=True),
+            until="empty", max_rounds=depth)
+        out = sess.run_plan(
+            plan,
+            carry=self._make_batch(first, np.zeros(n, dtype=bool), operand,
+                                   None),
+            state={"alive": np.arange(n, dtype=np.int64), "keys": first})
+        return ChainResult(values=fetched, keys=touched, hops=out.rounds,
+                           reports=[r.report for r in out.results])
 
     # ---- multi-get batches -------------------------------------------------
     def multi_get(

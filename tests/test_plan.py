@@ -1,0 +1,508 @@
+"""StagePlan equivalence and emission contracts (core/plan.py).
+
+The load-bearing claim: a plan-driven run is *indistinguishable in cost*
+from the hand-rolled driver loop it replaces — the plan runner hits the
+session's `run_stage`/`edge_map` entry points with exactly the same batches
+in exactly the same order, so per-phase words/rounds/work are bit-identical
+(`assert_session_parity`), across engines × backends × replication on/off.
+The hand-rolled references below are verbatim copies of the pre-plan
+drivers.
+
+Plus: emission edge cases (empty frontier round, zero-emission lambda,
+max_rounds cutoff), `TaskBatch.validate` error messages, and the jax
+device-residency contract (≤ 1 host sync per round; a static loop flushes
+once at plan exit).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CARRY, DataStore, Orchestrator, StagePlan, TaskBatch,
+                        assert_session_parity)
+from repro.graph import (DistVertexSubset, GraphSession, bc, bfs, cc,
+                         generators, ingest, pagerank, sssp)
+from repro.kvstore import DistributedHashTable
+
+ENGINES = ["tdorch", "push", "pull", "sort"]
+BACKENDS = ["numpy", "jax"]
+REPLICATION = [None, {"num_hot": 8, "refresh": 2, "min_count": 1.0}]
+P = 4
+
+
+def _graph(seed=3, n=80):
+    g = generators.erdos_renyi(n, 0.06, seed=seed).with_weights(seed=seed)
+    return ingest(g, P=P)
+
+
+# ---------------------------------------------------------------------------
+# hand-rolled reference drivers (verbatim pre-plan code)
+# ---------------------------------------------------------------------------
+def _bfs_loop(og, source, backend=None, replication=None):
+    n = og.n
+    sess = GraphSession(og, {}, replication=replication, backend=backend)
+    dist = np.full(n, -1, dtype=np.int64)
+    dist[source] = 0
+    frontier = DistVertexSubset.single(n, source)
+    rnd = 0
+    while not frontier.is_empty:
+        rnd += 1
+
+        def f(s, d, w, _r=rnd):
+            return np.full(s.size, float(_r))
+
+        def wb(vs, agg):
+            fresh = dist[vs] == -1
+            dist[vs[fresh]] = agg[fresh].astype(np.int64)
+            return fresh
+
+        frontier, st = sess.edge_map(frontier, f, wb, "max",
+                                     filter_dst=lambda d: dist[d] == -1)
+    return dist, rnd, sess.report
+
+
+def _sssp_loop(og, source, backend=None, replication=None):
+    n = og.n
+    sess = GraphSession(og, {}, replication=replication, backend=backend)
+    dist = np.full(n, np.inf)
+    dist[source] = 0.0
+    frontier = DistVertexSubset.single(n, source)
+    rnd = 0
+    while not frontier.is_empty:
+        rnd += 1
+
+        def f(s, d, w):
+            return dist[s] + w
+
+        def wb(vs, agg):
+            better = agg < dist[vs]
+            dist[vs[better]] = agg[better]
+            return better
+
+        frontier, st = sess.edge_map(frontier, f, wb, "min")
+        if rnd > og.n + 1:
+            raise RuntimeError("SSSP failed to converge")
+    return dist, rnd, sess.report
+
+
+def _cc_loop(og, backend=None, replication=None):
+    n = og.n
+    sess = GraphSession(og, {}, replication=replication, backend=backend)
+    labels = np.arange(n, dtype=np.float64)
+    frontier = DistVertexSubset.full(n)
+    rnd = 0
+    while not frontier.is_empty:
+        rnd += 1
+
+        def f(s, d, w):
+            return labels[s]
+
+        def wb(vs, agg):
+            better = agg < labels[vs]
+            labels[vs[better]] = agg[better]
+            return better
+
+        frontier, st = sess.edge_map(frontier, f, wb, "min")
+    return labels.astype(np.int64), rnd, sess.report
+
+
+def _bc_loop(og, source):
+    n = og.n
+    sess = GraphSession(og, {})
+    num_paths = np.zeros(n)
+    rounds_arr = np.zeros(n, dtype=np.int64)
+    num_paths[source] = 1.0
+    rounds_arr[source] = 1
+    frontier = DistVertexSubset.single(n, source)
+    frontiers = {1: frontier}
+    rnd = 1
+    while not frontier.is_empty:
+        rnd += 1
+
+        def f(s, d, w):
+            return num_paths[s]
+
+        def wb(vs, agg, _r=rnd):
+            fresh = rounds_arr[vs] == 0
+            num_paths[vs[fresh]] += agg[fresh]
+            rounds_arr[vs[fresh]] = _r
+            return fresh
+
+        frontier, st = sess.edge_map(
+            frontier, f, wb, "add", filter_dst=lambda d: rounds_arr[d] == 0)
+        if not frontier.is_empty:
+            frontiers[rnd] = frontier
+    last = max(frontiers)
+    visited = rounds_arr > 0
+    phi = np.zeros(n)
+    phi[visited] = 1.0 / num_paths[visited]
+    for r in range(last, 1, -1):
+        fr = frontiers[r]
+
+        def f(s, d, w):
+            return phi[s]
+
+        def wb(vs, agg, _r=r):
+            sel = rounds_arr[vs] == _r - 1
+            phi[vs[sel]] += agg[sel]
+            return sel
+
+        _, st = sess.edge_map(
+            fr, f, wb, "add", filter_dst=lambda d, _r=r: rounds_arr[d] == _r - 1)
+    delta = np.zeros(n)
+    delta[visited] = phi[visited] * num_paths[visited] - 1.0
+    delta[source] = 0.0
+    return delta, rnd + last - 1, sess.report
+
+
+def _pagerank_loop(og, alpha=0.85, tol=1e-8, max_iter=20, backend=None,
+                   replication=None):
+    n = og.n
+    sess = GraphSession(og, {}, replication=replication, backend=backend)
+    deg = og.out_degree().astype(np.float64)
+    pr = np.full(n, 1.0 / n)
+    dangling = deg == 0
+    frontier = DistVertexSubset.full(n)
+    it = 0
+    for it in range(1, max_iter + 1):
+        contrib = np.divide(pr, deg, out=np.zeros(n), where=deg > 0)
+        nxt = np.full(n, (1.0 - alpha) / n + alpha * pr[dangling].sum() / n)
+
+        def f(s, d, w):
+            return contrib[s]
+
+        def wb(vs, agg):
+            nxt[vs] += alpha * agg
+            return np.ones(vs.size, dtype=bool)
+
+        _, st = sess.edge_map(frontier, f, wb, "add", force_mode="dense")
+        delta = np.abs(nxt - pr).sum()
+        pr = nxt
+        if delta < tol * n:
+            break
+    return pr, it, sess.report
+
+
+# ---------------------------------------------------------------------------
+# graph plan-vs-loop equivalence
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("replication", REPLICATION, ids=["rep_off", "rep_on"])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_bfs_plan_matches_loop(backend, replication):
+    og = _graph()
+    d_loop, rnd_loop, rep_loop = _bfs_loop(og, 0, backend=backend,
+                                           replication=replication)
+    d_plan, info = bfs(og, 0, backend=backend, replication=replication)
+    assert np.array_equal(d_plan, d_loop)
+    assert info.rounds == rnd_loop
+    assert len(info.stats) == rnd_loop
+    assert_session_parity(info.report, rep_loop)
+
+
+@pytest.mark.parametrize("replication", REPLICATION, ids=["rep_off", "rep_on"])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_pagerank_plan_matches_loop(backend, replication):
+    og = _graph(seed=5)
+    p_loop, it_loop, rep_loop = _pagerank_loop(og, max_iter=12,
+                                               backend=backend,
+                                               replication=replication)
+    p_plan, info = pagerank(og, max_iter=12, backend=backend,
+                            replication=replication)
+    assert np.array_equal(p_plan, p_loop)
+    assert info.rounds == it_loop
+    assert_session_parity(info.report, rep_loop)
+
+
+def test_sssp_and_cc_plan_match_loop():
+    og = _graph(seed=7)
+    d_loop, rnd_l, rep_l = _sssp_loop(og, 1)
+    d_plan, info = sssp(og, 1)
+    assert np.array_equal(d_plan, d_loop) and info.rounds == rnd_l
+    assert_session_parity(info.report, rep_l)
+
+    l_loop, rnd_l, rep_l = _cc_loop(og)
+    l_plan, info = cc(og)
+    assert np.array_equal(l_plan, l_loop) and info.rounds == rnd_l
+    assert_session_parity(info.report, rep_l)
+
+
+def test_bc_plan_matches_loop():
+    """BC: two chained fixpoint loops plus a host step — forward/backward
+    round structure, values, and per-phase costs all bit-identical to the
+    pre-plan driver."""
+    og = _graph(seed=9)
+    d_loop, rnd_loop, rep_loop = _bc_loop(og, 2)
+    d_plan, info = bc(og, 2)
+    assert np.array_equal(d_plan, d_loop)
+    assert info.rounds == rnd_loop
+    assert_session_parity(info.report, rep_loop)
+
+
+def test_bfs_isolated_source_single_round():
+    """A source with no out-edges: one (empty-edged) round, then the carried
+    frontier drains — identical to the old while-loop behavior."""
+    g = generators.star_graph(10)  # vertex 0 is the hub
+    og = ingest(g, P=P)
+    d_plan, info = bfs(og, 3)
+    d_loop, rnd, _ = _bfs_loop(og, 3)
+    assert np.array_equal(d_plan, d_loop)
+    assert info.rounds == rnd
+
+
+# ---------------------------------------------------------------------------
+# kv chain plan-vs-loop equivalence
+# ---------------------------------------------------------------------------
+def _fresh_table(seed=11):
+    ht = DistributedHashTable(192, P, value_width=2, seed=seed)
+    vals = np.arange(2 * 192, dtype=np.float64).reshape(192, 2)
+    ht.bulk_load(np.arange(192), vals)
+    return ht
+
+
+@pytest.mark.parametrize("replication", REPLICATION, ids=["rep_off", "rep_on"])
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("engine", ENGINES)
+def test_chain_plan_matches_loop(engine, backend, replication):
+    rng = np.random.default_rng(2)
+    n, hops = 48, 3
+    cols = rng.integers(0, 192, (n, hops))
+    op = np.stack([np.full(n, 0.5), rng.standard_normal(n)], axis=1)
+
+    ht_plan = _fresh_table()
+    out = ht_plan.run_chain(cols, op, engine=engine, backend=backend,
+                            replicate=replication)
+
+    ht_loop = _fresh_table()
+    loop_vals = []
+    for j in range(hops):
+        r = ht_loop.execute_batch(cols[:, j], np.zeros(n, dtype=bool), op,
+                                  engine=engine, backend=backend,
+                                  replicate=replication)
+        loop_vals.append(r.values)
+
+    assert out.hops == hops
+    for j in range(hops):
+        assert np.allclose(out.values[:, j], loop_vals[j], rtol=1e-6,
+                           atol=1e-7)
+        assert np.array_equal(out.keys[:, j], cols[:, j])
+    assert np.allclose(ht_plan.values, ht_loop.values, rtol=1e-6, atol=1e-7)
+    assert_session_parity(
+        ht_plan.session(engine, replicate=replication, backend=backend).report,
+        ht_loop.session(engine, replicate=replication, backend=backend).report)
+
+
+def test_chain_follow_mode_ends_tasks():
+    """Value-dependent chase: follow() returning -1 retires a task; retired
+    tasks stay NaN/-1 in later hop slots."""
+    ht = DistributedHashTable(64, P, value_width=1)
+    nxt = ((np.arange(64) * 5) % 64).astype(np.float64)
+    nxt[10] = -1.0  # chains reaching key 10 stop after it
+    ht.bulk_load(np.arange(64), nxt[:, None])
+
+    def follow(vals):
+        return vals[:, 0].astype(np.int64)
+
+    out = ht.run_chain(np.array([2, 10, 7]), np.ones((3, 2)), follow=follow,
+                       max_hops=3)
+    assert out.hops == 3
+    assert out.keys[1, 0] == 10 and out.keys[1, 1] == -1  # retired after hop 0
+    assert np.isnan(out.values[1, 1]).all()
+    assert out.keys[0, 1] == 10  # 2 -> 2*5 % 64 = 10
+
+
+# ---------------------------------------------------------------------------
+# emission edge cases
+# ---------------------------------------------------------------------------
+def _store_sess(backend=None):
+    store = DataStore.create(32, P, value_width=1, chunk_words=4, init=1.0)
+    return store, Orchestrator(store, engine="tdorch", backend=backend)
+
+
+def _unit_batch(n=8):
+    return TaskBatch(contexts=np.ones((n, 1)),
+                     read_keys=np.arange(n, dtype=np.int64),
+                     origin=TaskBatch.even_origins(n, P))
+
+
+def _inc(ctx, vals):
+    # traceable (+1 to every read chunk): works as jnp and numpy alike
+    return {"update": vals * 0.0 + 1.0}
+
+
+def test_empty_initial_carry_runs_zero_rounds():
+    store, sess = _store_sess()
+    plan = StagePlan().loop(StagePlan().stage(CARRY, _inc, "add"),
+                            until="empty")
+    out = sess.run_plan(plan)  # no carry at all
+    assert out.rounds == 0
+    assert out.records == []
+    assert out.loops[0].reason == "empty"
+    assert sess.report.num_stages == 0
+    assert np.all(store.values == 1.0)
+
+
+def test_zero_emission_lambda_stops_after_one_round():
+    store, sess = _store_sess()
+    plan = StagePlan().loop(
+        StagePlan().stage(CARRY, _inc, "add", emit=lambda st, res: None),
+        until="empty", max_rounds=10)
+    out = sess.run_plan(plan, carry=_unit_batch())
+    assert out.rounds == 1
+    assert out.loops[0].reason == "empty"
+    assert sess.report.num_stages == 1
+
+
+def test_max_rounds_cutoff():
+    store, sess = _store_sess()
+    plan = StagePlan().loop(
+        StagePlan().stage(CARRY, _inc, "add",
+                          emit=lambda st, res: _unit_batch()),
+        until="empty", max_rounds=3)
+    out = sess.run_plan(plan, carry=_unit_batch())
+    assert out.rounds == 3
+    assert out.loops[0].reason == "max_rounds"
+    assert np.all(store.values[:8] == 4.0)  # 3 rounds of +1 on keys 0..7
+
+
+def test_until_predicate_and_state_threading():
+    store, sess = _store_sess()
+
+    def stop_at_two(state):
+        state["seen"] = state.get("seen", 0) + 1
+        return state.round >= 2
+
+    plan = StagePlan().loop(
+        StagePlan().stage(lambda st: _unit_batch(), _inc, "add"),
+        until=stop_at_two, max_rounds=50)
+    out = sess.run_plan(plan)
+    assert out.rounds == 2
+    assert out.loops[0].reason == "until"
+    assert out.state["seen"] == 2
+
+
+def test_host_step_and_loop_require_stopping_rule():
+    store, sess = _store_sess()
+    seen = []
+    plan = (StagePlan().stage(_unit_batch(), _inc, "add")
+            .host(lambda st: seen.append(st.round)))
+    out = sess.run_plan(plan)
+    assert seen == [0]
+    assert [r.kind for r in out.records] == ["stage", "host"]
+    with pytest.raises(ValueError, match="stopping rule"):
+        StagePlan().loop(StagePlan().stage(CARRY, _inc), until=None)
+
+
+def test_carry_stage_without_carry_raises():
+    store, sess = _store_sess()
+    plan = StagePlan().stage(CARRY, _inc, "add")
+    with pytest.raises(ValueError, match="no tasks to run"):
+        sess.run_plan(plan)
+
+
+def test_carry_loop_without_emission_fails_loudly():
+    """until='empty' over a body with no emitting op can never drain the
+    carry — must raise instead of re-running the batch forever."""
+    store, sess = _store_sess()
+    plan = StagePlan().loop(StagePlan().stage(CARRY, _inc, "add"),
+                            until="empty")
+    with pytest.raises(RuntimeError, match="no progress"):
+        sess.run_plan(plan, carry=_unit_batch())
+
+
+# ---------------------------------------------------------------------------
+# device residency: host syncs per round (jax backend)
+# ---------------------------------------------------------------------------
+def test_jax_static_plan_flushes_once():
+    """A loop with no user callbacks keeps write-backs device-resident for
+    the whole plan: exactly one flush at exit, values still correct."""
+    store, sess = _store_sess(backend="jax")
+    batch = _unit_batch()
+    plan = StagePlan().loop(StagePlan().stage(batch, _inc, "add"),
+                            until=None, max_rounds=5)
+    before = sess.backend.host_syncs
+    out = sess.run_plan(plan)
+    syncs = sess.backend.host_syncs - before
+    assert out.rounds == 5
+    assert syncs == 1  # the single exit flush — 0.2 syncs/round
+    assert np.allclose(store.values[:8], 6.0)  # 5 rounds of +1
+    assert sess.report.num_stages == 5
+
+
+def test_jax_emitting_plan_at_most_one_sync_per_round():
+    store, sess = _store_sess(backend="jax")
+
+    def emit(state, res):
+        # reads host values — forces a flush, the round's one sync
+        assert np.allclose(store.values[:8], state.round + 2.0)
+        return _unit_batch() if state.round < 3 else None
+
+    plan = StagePlan().loop(StagePlan().stage(CARRY, _inc, "add", emit=emit),
+                            until="empty")
+    before = sess.backend.host_syncs
+    out = sess.run_plan(plan, carry=_unit_batch())
+    syncs = sess.backend.host_syncs - before
+    assert out.rounds == 4
+    assert syncs <= out.rounds  # ≤ 1 host sync per round
+
+
+# ---------------------------------------------------------------------------
+# TaskBatch.validate (fail fast with actionable messages)
+# ---------------------------------------------------------------------------
+class TestValidate:
+    def _store(self):
+        return DataStore.create(16, P, value_width=1, chunk_words=4)
+
+    def test_non_monotone_indptr(self):
+        b = _unit_batch(4)
+        b.read_indptr = np.array([0, 3, 2, 3, 4])  # mutated post-init
+        with pytest.raises(ValueError, match="non-decreasing.*task 1"):
+            b.validate(self._store())
+
+    def test_read_index_out_of_range(self):
+        b = _unit_batch(4)
+        b.read_indices = np.array([0, 1, 99, 3])
+        with pytest.raises(ValueError, match=r"read_indices\[2\] = 99.*16 chunks"):
+            b.validate(self._store())
+
+    def test_write_keys_length_mismatch(self):
+        b = _unit_batch(4)
+        b.write_keys = np.array([0, 1], dtype=np.int64)
+        with pytest.raises(ValueError, match="write_keys has 2 entries.*4 tasks"):
+            b.validate(self._store())
+
+    def test_write_key_out_of_range_and_origin(self):
+        b = _unit_batch(4)
+        b.write_keys = np.array([0, 1, 2, 16], dtype=np.int64)
+        with pytest.raises(ValueError, match=r"write_keys\[3\] = 16"):
+            b.validate(self._store())
+        b = _unit_batch(4)
+        b.origin = np.array([0, 1, 2, 9], dtype=np.int64)
+        with pytest.raises(ValueError, match=r"origin\[3\] = 9"):
+            b.validate(self._store())
+
+    def test_run_stage_validates(self):
+        store = self._store()
+        sess = Orchestrator(store, engine="tdorch")
+        b = _unit_batch(4)
+        b.read_indices = np.array([0, 1, 99, 3])
+        with pytest.raises(ValueError, match="out of range"):
+            sess.run_stage(b, _inc)
+
+    def test_valid_batch_passes_and_chains(self):
+        b = _unit_batch(4)
+        assert b.validate(self._store()) is b
+        assert b.validate() is b  # geometry-only check without a store
+
+
+# ---------------------------------------------------------------------------
+# interface drift (satellite): StagePlan is a front-door export
+# ---------------------------------------------------------------------------
+def test_interface_exports_and_forwarding():
+    import repro.core.interface as iface
+
+    assert "StagePlan" in iface.__all__
+    assert "backend=" in iface.__doc__ and "replication=" in iface.__doc__
+    assert "return_results" in iface.__doc__
+    store = DataStore.create(16, P, value_width=1, chunk_words=4)
+    tasks = _unit_batch(4)
+    res = iface.orchestration(tasks, lambda c, v: {"result": v}, store,
+                              engine="pull", return_results=True)
+    assert res.results is not None and res.results.shape == (4, 1)
