@@ -1,0 +1,139 @@
+"""Mesh-sharded SPMD backend: load balance across a shard-count sweep.
+
+The claim under test is the ROADMAP's "sharding" axis made concrete: with
+`backend="jax_spmd"` each mesh device IS one machine, so the per-machine
+loads the cost model charges (`SessionReport.per_machine()`) describe real
+per-shard work — and under the paper's skewed workloads TD-Orch (plus the
+adaptive replication subsystem) must keep the **max/mean shard-work ratio**
+near 1.0 while the skew would otherwise pile everything on the hot chunks'
+home shards.
+
+Cells (all deterministic under the fixed seed; requires a device mesh —
+run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``):
+
+* ``spmd/ycsb/C/zipf<a>/P<p>/rep{on,off}`` — stationary-Zipf YCSB-C through
+  one tdorch session per cell over a P-shard mesh. Metrics:
+  ``work_ratio`` (charged max/mean shard work — the acceptance gate: <= 1.5
+  at alpha=1.2 with replication on), ``h_ratio`` (max/mean h-relation),
+  ``words_per_task``, ``measured_work_ratio`` (the mesh's own
+  `ShardStageStats` placement — must agree with the charged one), and
+  informational ``wall_ms``.
+* ``spmd/pagerank/ba<n>/P<p>`` — PageRank rounds through
+  `GraphSession(backend="jax_spmd")` with the cost model on:
+  ``work_ratio``, ``words_per_edge``, ``wall_ms``.
+
+Cells whose shard count exceeds the visible device count are skipped (the
+committed baseline is produced on an 8-device mesh; the CI job always
+provides one, so a skipped cell there fails the regression gate's
+missing-row check — silent degradation is not an option).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.core import DataStore, Orchestrator, TaskBatch, make_backend
+from repro.kvstore import make_ycsb_stream
+
+from .common import row, timeit
+
+SEED = 17
+GAMMAS = [1.2, 2.0]
+REPLICATION = {"num_hot": 64, "refresh": 2, "decay": 0.5, "min_count": 8.0}
+
+
+def _muladd(contexts, in_vals):
+    mul = contexts[:, 1:2]
+    add = contexts[:, 2:3]
+    return {"update": in_vals * mul + add, "result": in_vals}
+
+
+def _drive_ycsb(backend, P, gamma, replication, tasks_per_machine, nkeys,
+                stages):
+    store = DataStore.create(nkeys, P, value_width=8, chunk_words=8)
+    sess = Orchestrator(store, engine="tdorch", backend=backend,
+                        replication=replication)
+    origin = TaskBatch.even_origins(tasks_per_machine * P, P)
+    for keys, is_read, operand in make_ycsb_stream(
+            "C", tasks_per_machine, P, nkeys, gamma=gamma, seed=SEED,
+            stages=stages):
+        ctx = np.concatenate(
+            [is_read[:, None].astype(np.float64), operand], axis=1)
+        wk = np.where(is_read, np.int64(-1), keys)
+        tasks = TaskBatch(contexts=ctx, read_keys=keys, write_keys=wk,
+                          origin=origin)
+        sess.run_stage(tasks, _muladd, write_back="write")
+    return sess
+
+
+def run(quick: bool = False):
+    ndev = len(jax.devices())
+    shard_counts = [p for p in (2, 4, 8) if p <= ndev]
+    if not shard_counts:
+        return []
+    backend = make_backend("jax_spmd")
+    tpm = 500 if quick else 2_000
+    stages = 4 if quick else 8
+    rows = []
+
+    # ---------------- skewed YCSB across the shard sweep -------------------
+    for P in shard_counts:
+        nkeys = 8 * tpm
+        for gamma in GAMMAS:
+            for rep_on in [False, True]:
+                replication = REPLICATION if rep_on else None
+
+                def call():
+                    return _drive_ycsb(backend, P, gamma, replication, tpm,
+                                       nkeys, stages)
+
+                wall = timeit(call, repeats=1, warmup=1)
+                backend.reset_stats()
+                sess = call()
+                pm = sess.report.per_machine()
+                measured = sum(
+                    (st.tasks for st in backend.stage_stats),
+                    np.zeros(P, dtype=np.int64))
+                m_ratio = float(measured.max(initial=0)
+                                / max(measured.mean(), 1e-12))
+                wpt = float(sess.report.sent.sum()) / (tpm * P * stages)
+                tag = "on" if rep_on else "off"
+                rows.append(row(
+                    f"spmd/ycsb/C/zipf{gamma}/P{P}/rep{tag}", wall * 1e6,
+                    f"work_ratio={pm['work_ratio']:.3f};"
+                    f"measured={m_ratio:.3f};h_ratio={pm['h_ratio']:.3f};"
+                    f"words_per_task={wpt:.3f}",
+                    seed=SEED, work_ratio=pm["work_ratio"],
+                    h_ratio=pm["h_ratio"], words_per_task=wpt,
+                    measured_work_ratio=m_ratio, wall_ms=wall * 1e3))
+
+    # ---------------- PageRank through a sharded GraphSession --------------
+    from repro.graph import generators
+    from repro.graph.algorithms import pagerank
+    from repro.graph.partition import ingest
+
+    n = 5_000 if quick else 50_000
+    g = generators.barabasi_albert(n, 4, seed=SEED)
+    for P in shard_counts:
+        og = ingest(g, P=P)
+
+        def call():
+            return pagerank(og, max_iter=6, tol=0.0, backend=backend)
+
+        wall = timeit(call, repeats=1, warmup=1)
+        _, info = call()
+        pm = info.report.per_machine()
+        wpe = float(info.report.sent.sum()) / g.m
+        rows.append(row(
+            f"spmd/pagerank/ba{n}/P{P}", wall * 1e6,
+            f"work_ratio={pm['work_ratio']:.3f};words_per_edge={wpe:.3f}",
+            seed=SEED, work_ratio=pm["work_ratio"], words_per_edge=wpe,
+            wall_ms=wall * 1e3))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_csv
+
+    print_csv(run(quick=True))

@@ -8,6 +8,7 @@
     (beyond) bench_skew       adaptive hot-chunk replication on vs off
     (beyond) bench_backend    numpy-oracle vs jitted-jax execution backend
     (beyond) bench_plan       StagePlan-driven rounds vs per-stage run_stage
+    (beyond) bench_spmd       mesh-sharded backend: shard-count load balance
     (beyond) bench_moe        TD-Orch vs push/pull as the MoE dispatcher
     (beyond) bench_kernels    per-kernel microbenchmarks
 
@@ -24,7 +25,7 @@ import time
 
 from . import (bench_ablation, bench_backend, bench_breakdown, bench_graph,
                bench_kernels, bench_moe, bench_plan, bench_scaling,
-               bench_skew, bench_ycsb)
+               bench_skew, bench_spmd, bench_ycsb)
 from .common import print_csv, write_json
 
 SUITES = {
@@ -32,6 +33,7 @@ SUITES = {
     "skew": bench_skew,
     "backend": bench_backend,
     "plan": bench_plan,
+    "spmd": bench_spmd,
     "graph": bench_graph,
     "scaling": bench_scaling,
     "breakdown": bench_breakdown,

@@ -3,11 +3,11 @@
 # push-pull + merge-able write-backs — plus the §2.3 baselines, reusable
 # Orchestrator sessions with a pluggable engine registry, and the SPMD
 # (shard_map) production realization used by the LM stack.
-from .backend import JaxBackend, NumpyBackend, make_backend
+from .backend import JaxBackend, NumpyBackend, SpmdBackend, make_backend
 from .comm_forest import CommForest, theory_fanout
 from .cost import (CostAccumulator, PhaseCost, SessionReport, StageReport,
                    assert_cost_parity, assert_session_parity)
-from .datastore import DataStore, TaskBatch
+from .datastore import DataStore, ShardLayout, TaskBatch
 from .engine import OrchestrationResult, TDOrchEngine
 from .baselines import DirectPullEngine, DirectPushEngine, SortBasedEngine
 from .execution import gather_values
@@ -19,11 +19,11 @@ from .replication import (HotChunkReplicator, ReplicaSet, ReplicationConfig,
 from .session import Orchestrator
 
 __all__ = [
-    "JaxBackend", "NumpyBackend", "make_backend",
+    "JaxBackend", "NumpyBackend", "SpmdBackend", "make_backend",
     "CommForest", "theory_fanout",
     "CostAccumulator", "PhaseCost", "SessionReport", "StageReport",
     "assert_cost_parity", "assert_session_parity",
-    "DataStore", "TaskBatch",
+    "DataStore", "ShardLayout", "TaskBatch",
     "OrchestrationResult", "TDOrchEngine",
     "DirectPullEngine", "DirectPushEngine", "SortBasedEngine",
     "gather_values",

@@ -1,4 +1,5 @@
-"""Pluggable numeric execution backends: numpy-as-oracle vs jitted JAX.
+"""Pluggable numeric execution backends: numpy oracle, jitted JAX, and the
+mesh-sharded SPMD realization.
 
 The simulation-fidelity contract (`core/engine.py`) already splits every
 stage into *numerics* (one vectorized gather → lambda → ⊗-combine → ⊙-apply
@@ -18,6 +19,12 @@ words/rounds). This module makes the numeric half pluggable:
   default — the device-native precision — and match the oracle within float
   tolerance; pass ``dtype="float64"`` (requires ``jax_enable_x64``) for
   full-precision parity.
+* `SpmdBackend` — `backend="jax_spmd"`: the machines made real over a
+  `shard_map` device mesh (`core/shardexec.py`). Each shard materializes
+  only the chunks it homes, runs the four phases locally, and exchanges
+  values / combined write-backs with bucketed power-of-two all-to-alls.
+  Same parity contract as the jax backend, plus measured per-shard
+  `stage_stats`.
 
 The backend-parity contract: per-phase **words and rounds are bit-identical**
 across backends, because every quantity the cost model consumes (execution
@@ -59,6 +66,20 @@ def _bucket_rows(n: int) -> int:
     return 1 << (int(n) - 1).bit_length()
 
 
+def _combine_eligibility(tasks, merge: Optional[MergeOp]):
+    """Shared by both device backends: (writer rows, fuse the ⊗-combine on
+    device?, hand real update rows back for the oracle apply?). Fusing
+    needs a supported merge and int32-safe priorities (the jitted combine
+    carries them as int32 order keys)."""
+    w_rows = np.flatnonzero(tasks.write_keys >= 0)
+    pr = tasks.priority
+    combine = bool(
+        w_rows.size and merge is not None and merge.name in _JAX_MERGES
+        and int(pr.min(initial=0)) > -(2**31)
+        and int(pr.max(initial=0)) < 2**31 - 1)
+    return w_rows, combine, bool(w_rows.size) and not combine
+
+
 @register_backend("numpy")
 class NumpyBackend:
     """The reference oracle: the float64 pure-numpy pass, unchanged."""
@@ -81,7 +102,13 @@ class NumpyBackend:
 
     # -- phase 3 -----------------------------------------------------------
     def execute(self, tasks, store, f: Callable, merge: Optional[MergeOp] = None,
-                want_result: bool = True) -> Dict[str, Optional[np.ndarray]]:
+                want_result: bool = True, exec_site=None,
+                replicas=None) -> Dict[str, Optional[np.ndarray]]:
+        """Run the stage numerics. `exec_site`/`replicas` describe where the
+        cost model placed each task and which chunks the session has
+        replicated — advisory for single-device backends (the oracle and the
+        jitted pipeline compute the same values regardless), load-bearing
+        for the mesh-sharded backend, which places real work by them."""
         return execution.execute(tasks, store, f)
 
     # -- phase 4 -----------------------------------------------------------
@@ -221,7 +248,8 @@ class JaxBackend(NumpyBackend):
 
     # -- phase 3 (+ fused phase-4 ⊗) ---------------------------------------
     def execute(self, tasks, store, f: Callable, merge: Optional[MergeOp] = None,
-                want_result: bool = True) -> Dict[str, Optional[np.ndarray]]:
+                want_result: bool = True, exec_site=None,
+                replicas=None) -> Dict[str, Optional[np.ndarray]]:
         self._stash = None
         if tasks.n == 0 or id(f) in self._host_lambdas \
                 or store.num_keys >= 2**30:
@@ -229,17 +257,10 @@ class JaxBackend(NumpyBackend):
             return execution.execute(tasks, store, f)
 
         n = tasks.n
-        writes = tasks.write_keys >= 0
-        w_rows = np.flatnonzero(writes)
+        # when there ARE writers but no fused combine, the engines need the
+        # real update rows for the oracle apply (want_update)
+        w_rows, combine, want_update = _combine_eligibility(tasks, merge)
         pr = tasks.priority
-        combine = bool(
-            w_rows.size and merge is not None and merge.name in _JAX_MERGES
-            and int(pr.min(initial=0)) > -(2**31)
-            and int(pr.max(initial=0)) < 2**31 - 1)
-        # a lambda that never returns an update makes want_update moot; when
-        # there ARE writers but no fused combine, the engines need the real
-        # update rows for the oracle apply
-        want_update = bool(w_rows.size) and not combine
         uniq = None
         if combine:
             uniq, seg_w = np.unique(tasks.write_keys[w_rows],
@@ -328,28 +349,37 @@ class JaxBackend(NumpyBackend):
                            combined, merge.name, dv)
         return host
 
-    # -- phase 4 ⊙ ----------------------------------------------------------
-    def apply_writes(self, tasks, store, updates, merge: MergeOp, cost) -> None:
-        if updates is None:
-            return
+    def _take_stash(self, tasks, updates, merge: MergeOp):
+        """Shared apply_writes preamble for both device backends: coerce
+        `updates` to (n, w) rows and match them against the one-slot
+        execute() carry. Returns (stash, updates) — stash None means "no
+        fused combine for this pair, run the oracle apply". Guards the
+        sentinel: if an engine transformed our zero-strided placeholder
+        (copy/slice breaks the id match), applying it as real update rows
+        would silently write zeros — refuse instead."""
         stash, self._stash = self._stash, None
         updates = np.atleast_2d(np.asarray(updates))
         if updates.shape[0] != tasks.n:
             updates = updates.T
         if (stash is None or stash[0] != id(tasks)
                 or stash[1] != id(updates) or stash[5] != merge.name):
-            # no fused combine for this (tasks, updates) pair — oracle apply.
-            # Guard the sentinel: if an engine transformed our zero-strided
-            # placeholder (copy/slice breaks the id match), applying it as
-            # real update rows would silently write zeros — refuse instead.
             if (stash is not None and updates.size
                     and 0 in updates.strides and not updates.any()):
                 raise RuntimeError(
-                    "jax backend: the zero-copy update placeholder from "
-                    "execute() was transformed before apply_writes (id no "
-                    "longer matches the fused combine). Pass the update "
+                    f"{self.name} backend: the zero-copy update placeholder "
+                    "from execute() was transformed before apply_writes (id "
+                    "no longer matches the fused combine). Pass the update "
                     "array through unchanged, or use backend='numpy' for "
                     "this engine.")
+            return None, updates
+        return stash, updates
+
+    # -- phase 4 ⊙ ----------------------------------------------------------
+    def apply_writes(self, tasks, store, updates, merge: MergeOp, cost) -> None:
+        if updates is None:
+            return
+        stash, updates = self._take_stash(tasks, updates, merge)
+        if stash is None:
             self._flush_if_deferred(store)
             execution.apply_writes(tasks, store, updates, merge, cost)
             return
@@ -433,11 +463,122 @@ class JaxBackend(NumpyBackend):
         return super().combine_by_key(values, keys, num_keys, merge, order)
 
 
+@register_backend("jax_spmd")
+class SpmdBackend(JaxBackend):
+    """The mesh-sharded SPMD execution backend (`core/shardexec.py`).
+
+    Machines become real: a 1-D `shard_map` device mesh with one shard per
+    machine, each materializing only the `DataStore` chunks it homes (plus
+    the session's `ReplicaSet` entries) and executing only the tasks the
+    cost model placed on it (`exec_site`). Phase 1 is a per-shard histogram
+    + `psum`; Phases 2/4 move values and ⊗-combined write-backs with
+    bucketed power-of-two ragged all-to-alls; replicated chunks are read
+    from a shard-local slab and write-through-refreshed by a masked `psum`.
+
+    The parity contract is unchanged: cost-model inputs are host-computed
+    by the same code as the oracle (per-phase words/rounds bit-identical),
+    values match the single-device jax backend within float tolerance. On
+    CPU, run with ``XLA_FLAGS=--xla_force_host_platform_device_count=P`` —
+    requesting a store with more machines than visible devices fails
+    loudly (`shardexec.get_mesh`).
+
+    `stage_stats` accumulates one `ShardStageStats` per sharded stage: what
+    the mesh *measured* (tasks placed, all-to-all rows, replica-local
+    reads), the executed counterpart of `SessionReport.per_machine()`.
+    """
+
+    name = "jax_spmd"
+
+    def __init__(self, dtype: str = "float32"):
+        super().__init__(dtype=dtype)
+        from . import shardexec
+
+        self._sx = shardexec
+        self._programs: dict = {}  # compiled stage per (lambda, shape sig)
+        self.stage_stats: list = []
+
+    # -- fail-fast device-count validation ----------------------------------
+    def validate_machines(self, P: int) -> None:
+        """Raise loudly when the mesh cannot give every machine a device
+        (called by sessions at construction; `execute` re-checks)."""
+        self._sx.get_mesh(int(P))
+
+    def reset_stats(self) -> list:
+        out, self.stage_stats = self.stage_stats, []
+        return out
+
+    # -- phase 3 (sharded) + fused phase-4 ----------------------------------
+    def execute(self, tasks, store, f: Callable, merge: Optional[MergeOp] = None,
+                want_result: bool = True, exec_site=None,
+                replicas=None) -> Dict[str, Optional[np.ndarray]]:
+        self._stash = None
+        self._sx.get_mesh(store.P)  # device-count failure must not degrade
+        if tasks.n == 0 or id(f) in self._host_lambdas \
+                or store.num_keys >= 2**30:
+            self._flush_if_deferred(store)
+            return execution.execute(tasks, store, f)
+        w_rows, combine, want_update = _combine_eligibility(tasks, merge)
+        self._flush_if_deferred(store)  # slabs materialize from host values
+        try:
+            out = self._sx.run_sharded_stage(
+                self, tasks, store, f, merge, want_result, combine,
+                want_update, exec_site, replicas)
+        except self._sx.ShardStageError:
+            # untraceable lambda / unshardable update shape: permanently
+            # route this function object to the oracle path (genuinely
+            # broken lambdas raise there, with a host traceback). Host-side
+            # placement/layout failures are NOT caught — they propagate as
+            # the bugs they are instead of silently unsharding the run.
+            self._host_lambdas.add(id(f))
+            return execution.execute(tasks, store, f)
+        self.stage_stats.append(out["stats"])
+        host: Dict[str, Optional[np.ndarray]] = {"result": out["result"],
+                                                 "update": out["update"]}
+        # update_width == 0 means the lambda returned no "update" at all —
+        # then there is nothing to combine and the engine must see None,
+        # exactly as the oracle would
+        if combine and out["update_width"] > 0:
+            uniq = np.unique(tasks.write_keys[w_rows])
+            placeholder = np.broadcast_to(
+                np.zeros((), dtype=self._np_dtype),
+                (tasks.n, out["update_width"]))
+            host["update"] = placeholder
+            self._stash = (id(tasks), id(placeholder), placeholder, uniq,
+                           out["new_slabs"], merge.name, out["rep_arrays"],
+                           replicas)
+        return host
+
+    # -- phase 4 ⊙ (owner shards already applied; host copy catches up) ------
+    def apply_writes(self, tasks, store, updates, merge: MergeOp, cost) -> None:
+        if updates is None:
+            return
+        stash, updates = self._take_stash(tasks, updates, merge)
+        if stash is None:
+            self._flush_if_deferred(store)
+            execution.apply_writes(tasks, store, updates, merge, cost)
+            return
+        _, _, _, uniq, new_slabs, _, rep_arrays, replicas = stash
+        if uniq.size == 0:
+            return
+        cost.work(store.home[uniq], 1.0)
+        # the owner shards already ⊙-applied to their slabs inside the
+        # stage program; the authoritative host copy catches up with one
+        # cross-shard gather of exactly the written rows
+        rows = self._sx.gather_slab_rows(store, new_slabs, uniq)
+        self.host_syncs += 1
+        store.write_rows(uniq, rows.astype(store.values.dtype, copy=False))
+        self._sx._pin_slabs(store, self._np_dtype, new_slabs)
+        if rep_arrays is not None and replicas is not None:
+            self._sx._pin_replicas(store, replicas, self._np_dtype,
+                                   rep_arrays)
+
+
 def make_backend(spec) -> NumpyBackend:
     """Coerce a user-facing `backend=` spec into a backend instance.
 
     None/"numpy" → the shared numpy oracle; "jax" → a `JaxBackend`
-    (float32); an existing backend instance passes through (shared device
+    (float32); "jax_spmd" → a `SpmdBackend` (float32, one mesh shard per
+    machine); an existing backend instance passes through (shared device
     caches across sessions).
     """
     if spec is None:

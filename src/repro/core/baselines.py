@@ -85,7 +85,8 @@ class DirectPullEngine:
 
         cost.begin("pull_execute")
         out = self.backend.execute(tasks, store, f, merge,
-                                   want_result=return_results)
+                                   want_result=return_results,
+                                   replicas=replicas)
         cost.work(tasks.origin, self.work_per_task)
         cost.end()
         # results already live at the task's origin machine — no return traffic
@@ -170,7 +171,8 @@ class DirectPushEngine:
 
         cost.begin("push_execute")
         out = self.backend.execute(tasks, store, f, merge,
-                                   want_result=return_results)
+                                   want_result=return_results,
+                                   exec_site=exec_site, replicas=replicas)
         cost.work(exec_site, self.work_per_task)
         results = out.get("result")
         if return_results and results is not None:
@@ -251,7 +253,8 @@ class SortBasedEngine:
 
         cost.begin("sort_execute")
         out = self.backend.execute(tasks, store, f, merge,
-                                   want_result=return_results)
+                                   want_result=return_results,
+                                   exec_site=sorted_machine, replicas=replicas)
         cost.work(sorted_machine, self.work_per_task)
         cost.end()
 

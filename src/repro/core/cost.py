@@ -346,6 +346,31 @@ class SessionReport:
             "compute": float(comp.max() / max(comp.mean(), 1e-12)),
         }
 
+    def per_machine(self) -> Dict[str, object]:
+        """Per-machine load breakdown across the whole session — the
+        paper's load-balance claim (Definition 1) as an asserted quantity:
+        `work` is each machine's summed compute, `h_relation` its BSP
+        communication volume (max of words in/out per stage, summed), and
+        the `*_ratio` fields are max/mean over machines (1.0 = perfectly
+        balanced; Theorem 1 promises O(1) under TD-Orch). The mesh-sharded
+        execution backend (`backend="jax_spmd"`) places real per-shard work
+        by exactly these numbers, so this breakdown is what
+        `benchmarks/bench_spmd.py` gates. Bit-identical across execution
+        backends, like every other cost quantity."""
+        work, sent, recv = self.compute, self.sent, self.recv
+        h = self.comm
+        mean_work = float(work.mean()) if work.size else 0.0
+        mean_h = float(h.mean()) if h.size else 0.0
+        return {
+            "work": work, "sent": sent, "recv": recv, "h_relation": h,
+            "max_work": float(work.max(initial=0.0)),
+            "mean_work": mean_work,
+            "work_ratio": float(work.max(initial=0.0) / max(mean_work, 1e-12)),
+            "max_h": float(h.max(initial=0.0)),
+            "mean_h": mean_h,
+            "h_ratio": float(h.max(initial=0.0) / max(mean_h, 1e-12)),
+        }
+
     def summary(self) -> Dict[str, float]:
         return {
             "P": self.P,

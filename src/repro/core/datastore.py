@@ -15,6 +15,45 @@ import numpy as np
 from . import hashing
 
 
+def stable_bucket_slots(bucket_ids: np.ndarray, num_buckets: int):
+    """Each element's position within its bucket, preserving input order —
+    the slotting rule shared by the shard-residency layout and the mesh
+    task/pair placement (`core/shardexec.py`). Returns ``(slot, counts)``:
+    element i lands at row ``slot[i]`` of bucket ``bucket_ids[i]``, whose
+    total population is ``counts[bucket_ids[i]]``."""
+    bucket_ids = np.asarray(bucket_ids, dtype=np.int64)
+    counts = np.bincount(bucket_ids, minlength=num_buckets)
+    order = np.argsort(bucket_ids, kind="stable")
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    slot = np.zeros(bucket_ids.size, dtype=np.int64)
+    slot[order] = np.arange(bucket_ids.size, dtype=np.int64) \
+        - starts[bucket_ids[order]]
+    return slot, counts
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardLayout:
+    """Sharded-residency geometry: how the store's chunks partition over a
+    device mesh whose shard m IS machine m (`core/shardexec.py`).
+
+    Each shard materializes only the chunk rows it homes, as a dense
+    (slab_rows, value_width) slab: chunk k lives on shard ``owner[k]`` at
+    slab row ``local_slot[k]``; ``slab_keys[m, s]`` is the inverse map
+    (padded with ``num_keys`` past machine m's last chunk). Pure placement
+    metadata — the float values themselves are materialized per shard by
+    the execution backend.
+    """
+
+    owner: np.ndarray  # (num_keys,) == DataStore.home
+    local_slot: np.ndarray  # (num_keys,) row within the owner's slab
+    slab_keys: np.ndarray  # (P, slab_rows) chunk key per slab row
+    counts: np.ndarray  # (P,) chunks homed per machine
+
+    @property
+    def slab_rows(self) -> int:
+        return int(self.slab_keys.shape[1])
+
+
 @dataclasses.dataclass
 class DataStore:
     """num_keys chunks, each `chunk_words` (=B) words wide, values float64.
@@ -70,6 +109,25 @@ class DataStore:
 
     def snapshot(self) -> np.ndarray:
         return self.values.copy()
+
+    def shard_layout(self) -> ShardLayout:
+        """The store's sharded-residency geometry (cached: `home` is fixed
+        at creation). Shard m's slab holds exactly the chunks with
+        ``home == m``, in ascending key order; the padding rows that square
+        the slabs off to the largest per-machine count are addressed by
+        nobody (their key is ``num_keys``)."""
+        lay = self.__dict__.get("_shard_layout")
+        if lay is not None:
+            return lay
+        K, P = self.num_keys, self.P
+        local_slot, counts = stable_bucket_slots(self.home, P)
+        rows = max(int(counts.max(initial=1)), 1)
+        slab_keys = np.full((P, rows), K, dtype=np.int64)
+        slab_keys[self.home, local_slot] = np.arange(K, dtype=np.int64)
+        lay = ShardLayout(owner=self.home, local_slot=local_slot,
+                          slab_keys=slab_keys, counts=counts)
+        self.__dict__["_shard_layout"] = lay
+        return lay
 
     def storage_per_machine(self) -> np.ndarray:
         out = np.zeros(self.P, dtype=np.int64)

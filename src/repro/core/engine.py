@@ -175,9 +175,12 @@ class TDOrchEngine:
         cost.begin("phase3_execute")
         # want_result lets a device backend skip materializing per-task
         # results the caller never asked for (a StagePlan round's only host
-        # traffic is then the write-back / flush path)
+        # traffic is then the write-back / flush path); exec_site/replicas
+        # let the mesh-sharded backend place real work exactly where the
+        # cost model just charged it
         out = self.backend.execute(tasks, store, f, merge,
-                                   want_result=return_results)
+                                   want_result=return_results,
+                                   exec_site=exec_site, replicas=replicas)
         updates = out.get("update")
         results = out.get("result")
         cost.work(exec_site, self.work_per_task)

@@ -12,8 +12,10 @@ scheduling strategy — "tdorch" (ours) or a §2.3 baseline, via the
 of the abstraction. `return_results=True` ships each task's per-task result
 back to its origin (and is what makes a device backend materialize results
 at all); it forwards unchanged to the engine. Session-level options ride the
-same call: `backend="numpy" | "jax"` picks the numeric execution backend
-(cost reports are bit-identical across backends) and `replication=` opts
+same call: `backend="numpy" | "jax" | "jax_spmd"` picks the numeric
+execution backend — the float64 oracle, the jitted single-device pipeline,
+or the mesh-sharded SPMD realization with one device per machine (cost
+reports are bit-identical across all three) — and `replication=` opts
 into the adaptive hot-chunk subsystem — both forward to the underlying
 `Orchestrator`.
 

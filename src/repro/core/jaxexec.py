@@ -48,6 +48,24 @@ def contention_counts(ids, num_bins: int, weights=None, *,
                      backend=kernel_backend)
 
 
+def detect_contention(item_ids, num_items: int,
+                      axis_name: str | None = None, weights=None, *,
+                      kernel_backend: str = "auto") -> jnp.ndarray:
+    """Global reference count per data item (§3.1) — the one Phase-1
+    primitive every realization shares: a per-shard histogram
+    (`contention_counts`) plus, under SPMD, one `psum` over `axis_name` —
+    on TPU an all-reduce *is* the balanced aggregation tree the paper
+    builds by hand, so counts ride it directly. `core/spmd.py` (MoE
+    dispatch), `core/shardexec.py` (the mesh-sharded simulator backend) and
+    `core/embedding.py` all call this same function; pass ``axis_name=None``
+    for the single-device form."""
+    counts = contention_counts(jnp.asarray(item_ids).reshape(-1), num_items,
+                               weights=weights, kernel_backend=kernel_backend)
+    if axis_name is not None:
+        counts = lax.psum(counts, axis_name)
+    return counts
+
+
 def select_hot(counts: jnp.ndarray, num_hot: int, min_count: int = 1):
     """Top-`num_hot` items by demand, thresholded. Returns (hot_ids (H,),
     rank lookup (E,) with -1 = cold). Static H keeps shapes jit-stable —

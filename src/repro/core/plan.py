@@ -51,7 +51,13 @@ framework may now apply: on the jax backend, `Orchestrator.run_plan` opens a
 plan scope in which write-backs stay device-resident (the host store copy is
 refreshed lazily — always *before* any user callback runs, and once at plan
 exit) and task batches are padded to bucketed static shapes so rounds with
-drifting batch sizes reuse compiled executables instead of re-jitting.
+drifting batch sizes reuse compiled executables instead of re-jitting. The
+mesh-sharded backend (``backend="jax_spmd"``) runs plans too: its per-shard
+slabs stay device-resident across rounds (owner shards ⊙-apply in place),
+per-shard batch shapes use the same pow2 bucketing against re-jitting, and
+the authoritative host copy catches up with one gather of the written rows
+per stage — so user callbacks always observe fresh host state without a
+flush scope.
 """
 from __future__ import annotations
 

@@ -35,10 +35,12 @@ class Orchestrator:
     """A long-lived scheduling session over one store and one engine.
 
     `backend=` selects the numeric execution backend threaded into the
-    engine ("numpy" — the float64 reference oracle, default — or "jax", the
-    jit-compiled pipeline of `core/backend.py`; also accepts a backend
-    instance to share device caches across sessions). Cost reports are
-    bit-identical across backends.
+    engine: "numpy" — the float64 reference oracle, default; "jax" — the
+    jit-compiled single-device pipeline; or "jax_spmd" — the mesh-sharded
+    SPMD realization (`core/shardexec.py`, one device per machine; on CPU
+    set ``XLA_FLAGS=--xla_force_host_platform_device_count=P``). Also
+    accepts a backend instance to share device caches across sessions.
+    Cost reports are bit-identical across backends.
 
     `replication=` turns on the session-owned hot-chunk subsystem
     (`core.replication`): pass True for defaults, a dict / `ReplicationConfig`
@@ -67,6 +69,11 @@ class Orchestrator:
             self.engine = engine
         self.replicator = make_replicator(replication, store.home, store.P,
                                           store.chunk_words)
+        # a backend that maps machines onto physical devices (jax_spmd)
+        # must fail at construction, not mid-run, when the mesh can't fit
+        check = getattr(self.backend, "validate_machines", None)
+        if check is not None:
+            check(store.P)
         self._report = SessionReport(store.P)
 
     # ------------------------------------------------------------------

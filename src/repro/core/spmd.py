@@ -36,26 +36,14 @@ import jax.numpy as jnp
 from jax import lax
 
 # the four-phase device primitives live in core/jaxexec.py, shared with the
-# jitted simulator backend (core/backend.py) — re-exported here so the SPMD
-# surface is unchanged
-from .jaxexec import (Routing, bucket_routing, contention_counts,
-                      gather_from_buckets, scatter_to_buckets, select_hot,
+# jitted simulator backend (core/backend.py) and the mesh-sharded backend
+# (core/shardexec.py) — re-exported here so the SPMD surface is unchanged.
+# `detect_contention` (Phase 1: per-shard histogram + psum) used to carry a
+# duplicate definition here; it is now the single jaxexec primitive.
+from .jaxexec import (Routing, bucket_routing, contention_counts,  # noqa: F401
+                      detect_contention, gather_from_buckets,
+                      scatter_to_buckets, select_hot,
                       sort_by_group as _sort_by_group)
-
-
-# ---------------------------------------------------------------------------
-# Phase 1: contention detection
-# ---------------------------------------------------------------------------
-def detect_contention(item_ids: jnp.ndarray, num_items: int,
-                      axis_name: Optional[str] = None) -> jnp.ndarray:
-    """Global reference count per data item (§3.1). One histogram + one
-    psum: the communication forest for *counts* degenerates to the
-    hardware's all-reduce tree. The histogram is the shared Phase-1 op
-    (`repro.kernels.histogram`, Pallas on TPU)."""
-    counts = contention_counts(item_ids.reshape(-1), num_items)
-    if axis_name is not None:
-        counts = lax.psum(counts, axis_name)
-    return counts
 
 
 # ---------------------------------------------------------------------------

@@ -73,8 +73,13 @@ def dist_edge_map(
     g = og.graph
     merge = get_merge_op(merge_value)
     sess = session if session is not None else session_for(og)
-    bk = make_backend(backend) if backend is not None \
-        else (getattr(sess, "backend", None) or make_backend(None))
+    if backend is not None:
+        bk = make_backend(backend)
+        check = getattr(bk, "validate_machines", None)
+        if check is not None:
+            check(og.P)
+    else:
+        bk = getattr(sess, "backend", None) or make_backend(None)
     idx = U.indices
     sum_deg = U.sum_degrees(og.out_indptr)
 

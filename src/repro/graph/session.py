@@ -110,9 +110,10 @@ class GraphSession:
     still ⊗-combine to the vertex home, then write-through to holders.
 
     `backend=` selects the numeric execution backend for the per-round
-    edge-value combine ("numpy" — the float64 oracle, default — or "jax",
-    the jitted scatter of `repro.core.backend`); cost reports are
-    bit-identical either way.
+    edge-value combine ("numpy" — the float64 oracle, default — "jax", the
+    jitted scatter of `repro.core.backend`, or "jax_spmd", which accepts
+    graph rounds too and validates the device mesh against P at
+    construction); cost reports are bit-identical either way.
     """
 
     og: "OrchestratedGraph"  # noqa: F821 — forward ref, avoids import cycle
@@ -127,6 +128,9 @@ class GraphSession:
         self.replicator = make_replicator(self.replication, og.vertex_home,
                                           og.P, VALUE_WORDS)
         self.backend = make_backend(self.backend)
+        check = getattr(self.backend, "validate_machines", None)
+        if check is not None:
+            check(og.P)
         self._report = SessionReport(og.P)
         self.stats: List = []
 

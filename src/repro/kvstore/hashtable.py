@@ -120,9 +120,10 @@ class DistributedHashTable:
         replicated on every machine — subsequent batches read them locally.
 
         `backend=` selects the numeric execution backend ("numpy" oracle /
-        "jax" jitted, see `repro.core.backend`); sessions are cached per
-        backend, and a jax session keeps the table's values device-resident
-        across batches.
+        "jax" jitted / "jax_spmd" mesh-sharded, see `repro.core.backend`);
+        sessions are cached per backend. A jax session keeps the table's
+        values device-resident across batches; a jax_spmd session shards
+        them — each mesh device materializes only the buckets it homes.
         """
         sig = (engine, _replication_sig(replicate),
                backend if isinstance(backend, (str, type(None))) else id(backend),

@@ -1,0 +1,379 @@
+"""Property-based differential conformance suite.
+
+Random ragged `TaskBatch`es, merge ops, replication configs and StagePlan
+emission patterns are executed across every engine x {numpy, jax, jax_spmd}
+and asserted value- and cost-equivalent to the numpy oracle: store values and
+per-task results within float tolerance, per-phase words/rounds/work
+bit-identical (`assert_cost_parity`). Cases are plain python dicts, so when
+hypothesis shrinks a failure the assertion message carries a minimal,
+paste-and-run repro snippet.
+
+Hypothesis is optional (tests/_hyp.py): without it the property tests skip
+and the seeded differential matrix below still pins the same contract on
+fixed cases. The suite scales its machine counts to the visible device
+count; the CI `spmd` job re-runs it on an 8-device mesh.
+
+Also here: the error-path contract — `TaskBatch.validate()` diagnostics,
+`assert_cost_parity` / `assert_session_parity` mismatch messages, and the
+loud `jax_spmd` failure when machines outnumber devices.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (CostAccumulator, DataStore, Orchestrator, TaskBatch,
+                        assert_cost_parity, assert_session_parity,
+                        make_backend)
+from repro.core.cost import SessionReport
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+NDEV = len(jax.devices())
+ENGINES = ["tdorch", "pull", "push", "sort"]
+MERGES = ["add", "min", "max", "or", "write"]
+RTOL, ATOL = 2e-4, 1e-5
+
+# shared backend instances: compiled programs stay warm across cases
+BACKENDS = {"jax": make_backend("jax"), "jax_spmd": make_backend("jax_spmd")}
+
+
+def _mk_lambda(w):
+    def f(contexts, vals, mask):
+        flat = vals.reshape(vals.shape[0], -1) if vals.ndim == 3 else vals
+        upd = flat[:, :w] * contexts[:, :1] + contexts[:, 1:2]
+        return {"update": upd, "result": flat}
+
+    return f
+
+
+# one function object per store width: jitted backends cache per lambda id
+_LAMBDAS = {w: _mk_lambda(w) for w in (1, 2, 3)}
+
+
+# ---------------------------------------------------------------------------
+# case model (plain dicts: hypothesis-shrinkable, repr() is an exact repro)
+# ---------------------------------------------------------------------------
+def _build_batch(case, P):
+    key_lists = case["key_lists"]
+    n = len(key_lists)
+    rng = np.random.default_rng(case["seed"])
+    ctx = rng.standard_normal((n, 2))
+    origin = np.asarray(case["origins"], dtype=np.int64) % max(P, 1)
+    wk = np.asarray(case["write_keys"], dtype=np.int64)
+    kw = {}
+    if case.get("priorities") is not None:
+        kw["priority"] = np.asarray(case["priorities"], dtype=np.int64)
+    return TaskBatch.from_ragged(ctx, key_lists, origin, write_keys=wk, **kw)
+
+
+def _run_session(case, engine, backend, P):
+    rng = np.random.default_rng(case["seed"] + 1)
+    store = DataStore.create(case["K"], P, value_width=case["w"],
+                             chunk_words=case["w"])
+    store.write_rows(np.arange(case["K"]),
+                     rng.standard_normal((case["K"], case["w"])))
+    rep = ({"num_hot": 4, "refresh": 1, "min_count": 1.0}
+           if case["replicated"] else None)
+    sess = Orchestrator(store, engine=engine, backend=backend,
+                        replication=rep)
+    f = _LAMBDAS[case["w"]]
+    results = [sess.run_stage(_build_batch(case, P), f,
+                              write_back=case["merge"], return_results=True)
+               for _ in range(case["stages"])]
+    return store, results, sess
+
+
+def run_case(case, engine, backend_name):
+    """Differential check of one case: `backend_name` vs the numpy oracle.
+    Raises AssertionError on any divergence. (`repr(case)` + this function
+    = the repro snippet printed on shrunk failures.)"""
+    backend = BACKENDS[backend_name]
+    # the mesh needs a device per machine; clamp the case rather than skip
+    # so shrunk repros stay runnable on any box
+    P = case["P"] if backend_name != "jax_spmd" else min(case["P"], NDEV)
+    s_np, r_np, sess_np = _run_session(case, engine, "numpy", P)
+    s_bk, r_bk, sess_bk = _run_session(case, engine, backend, P)
+    assert np.allclose(s_np.values, s_bk.values, rtol=RTOL, atol=ATOL), \
+        "store values diverged from the numpy oracle"
+    assert_session_parity(sess_np.report, sess_bk.report)
+    for a, b in zip(r_np, r_bk):
+        assert np.array_equal(a.exec_site, b.exec_site), "exec_site diverged"
+        assert a.refcount == b.refcount, "Phase-1 refcounts diverged"
+        if a.results is not None:
+            n = np.asarray(a.results).shape[0]
+            assert np.allclose(
+                np.asarray(a.results, dtype=np.float64).reshape(n, -1),
+                np.asarray(b.results, dtype=np.float64).reshape(n, -1),
+                rtol=RTOL, atol=ATOL), "per-task results diverged"
+
+
+def _repro_snippet(case, engine, backend_name) -> str:
+    return (
+        "\n--- minimal repro (shrunk) ---\n"
+        "from test_conformance import run_case\n"
+        f"run_case({case!r},\n         engine={engine!r}, "
+        f"backend_name={backend_name!r})\n"
+    )
+
+
+def _check_with_repro(case, engine, backend_name):
+    try:
+        run_case(case, engine, backend_name)
+    except AssertionError as e:
+        raise AssertionError(
+            f"{engine} x {backend_name}: {e}"
+            + _repro_snippet(case, engine, backend_name)) from None
+
+
+def _random_case(rng) -> dict:
+    n = int(rng.integers(1, 16))
+    K = int(rng.choice([12, 24]))
+    return {
+        "P": int(rng.integers(1, 5)),
+        "K": K,
+        "w": int(rng.choice([1, 3])),
+        "key_lists": [rng.integers(0, K, rng.integers(0, 4)).tolist()
+                      for _ in range(n)],
+        "write_keys": rng.integers(-1, K, n).tolist(),
+        "origins": rng.integers(0, 8, n).tolist(),
+        "priorities": (rng.integers(0, 6, n).tolist()
+                       if rng.random() < 0.5 else None),
+        "merge": str(rng.choice(MERGES)),
+        "replicated": bool(rng.random() < 0.5),
+        "stages": 2,
+        "seed": int(rng.integers(0, 2**31)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# seeded differential matrix — always runs, hypothesis or not
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("backend_name", ["jax", "jax_spmd"])
+def test_seeded_differential_matrix(engine, backend_name):
+    rng = np.random.default_rng(2026)
+    for _ in range(4):
+        case = _random_case(rng)
+        _check_with_repro(case, engine, backend_name)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests (skipped when hypothesis is absent)
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _cases(draw):
+        K = draw(st.sampled_from([12, 24]))
+        n = draw(st.integers(min_value=1, max_value=14))
+        key_lists = draw(st.lists(
+            st.lists(st.integers(0, K - 1), min_size=0, max_size=3),
+            min_size=n, max_size=n))
+        return {
+            "P": draw(st.integers(1, 4)),
+            "K": K,
+            "w": draw(st.sampled_from([1, 3])),
+            "key_lists": key_lists,
+            "write_keys": draw(st.lists(st.integers(-1, K - 1),
+                                        min_size=n, max_size=n)),
+            "origins": draw(st.lists(st.integers(0, 7),
+                                     min_size=n, max_size=n)),
+            # duplicate priorities exercise the deterministic cross-shard
+            # "write" tie-break (order, then global row id)
+            "priorities": draw(st.one_of(
+                st.none(),
+                st.lists(st.integers(0, 5), min_size=n, max_size=n))),
+            "merge": draw(st.sampled_from(MERGES)),
+            "replicated": draw(st.booleans()),
+            "stages": 2,
+            "seed": draw(st.integers(0, 2**31 - 1)),
+        }
+
+    CASES = _cases()
+else:  # the shim's `given` skips the tests; the strategy is never drawn
+    CASES = None
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(case=CASES)
+def test_conformance_vs_oracle_jax(case):
+    for engine in ENGINES:
+        _check_with_repro(case, engine, "jax")
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(case=CASES)
+def test_conformance_vs_oracle_jax_spmd(case):
+    for engine in ENGINES:
+        _check_with_repro(case, engine, "jax_spmd")
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(case=CASES)
+def test_replication_is_cost_only(case):
+    """Replication must never change values or results, only where the cost
+    model says the bytes come from — on any backend."""
+    on = dict(case, replicated=True)
+    off = dict(case, replicated=False)
+    P = min(case["P"], NDEV)
+    s_on, r_on, _ = _run_session(on, "tdorch", BACKENDS["jax_spmd"], P)
+    s_off, r_off, _ = _run_session(off, "tdorch", BACKENDS["jax_spmd"], P)
+    assert np.allclose(s_on.values, s_off.values, rtol=RTOL, atol=ATOL)
+    for a, b in zip(r_on, r_off):
+        if a.results is not None:
+            assert np.allclose(np.asarray(a.results, dtype=np.float64),
+                               np.asarray(b.results, dtype=np.float64),
+                               rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# StagePlan emission patterns (the kv chain front door) across backends
+# ---------------------------------------------------------------------------
+def _chain_case(seed, n=12, hops=3, K=40):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, K, (n, hops)), rng.standard_normal((n, 2)), K)
+
+
+@pytest.mark.parametrize("backend_name", ["jax", "jax_spmd"])
+def test_plan_emission_conformance(backend_name):
+    """run_chain — a StagePlan with a task-emitting continuation — must be
+    hop-for-hop identical across backends (values within tolerance, per-hop
+    cost reports bit-identical)."""
+    from repro.kvstore import DistributedHashTable
+
+    keys, op, K = _chain_case(31)
+    out = {}
+    for bk in ["numpy", BACKENDS[backend_name]]:
+        ht = DistributedHashTable(K, min(4, NDEV) if backend_name ==
+                                  "jax_spmd" else 4, value_width=3, seed=3)
+        ht.bulk_load(np.arange(K),
+                     np.random.default_rng(7).standard_normal((K, 3)))
+        out[getattr(bk, "name", bk)] = ht.run_chain(keys, op,
+                                                    engine="tdorch",
+                                                    backend=bk)
+    a, b = out["numpy"], out[backend_name]
+    assert a.hops == b.hops
+    assert np.array_equal(a.keys, b.keys)
+    assert np.allclose(np.nan_to_num(a.values), np.nan_to_num(b.values),
+                       rtol=RTOL, atol=ATOL)
+    for ra, rb in zip(a.reports, b.reports):
+        assert_cost_parity(ra, rb)
+
+
+# ---------------------------------------------------------------------------
+# error paths: validate() messages, parity diagnostics, device-count failure
+# ---------------------------------------------------------------------------
+def _tiny_store(P=2, K=8, w=1):
+    return DataStore.create(K, P, value_width=w, chunk_words=w)
+
+
+def _tiny_batch(**kw):
+    args = dict(contexts=np.zeros((3, 1)),
+                read_keys=np.array([0, 1, 2]),
+                origin=np.array([0, 1, 0]))
+    args.update(kw)
+    return TaskBatch(**args)
+
+
+class TestValidateMessages:
+    def test_indptr_length(self):
+        t = _tiny_batch()
+        t.read_indptr = t.read_indptr[:-1]
+        with pytest.raises(ValueError, match=r"needs n\+1"):
+            t.validate()
+
+    def test_indptr_coverage(self):
+        t = _tiny_batch()
+        t.read_indptr = t.read_indptr.copy()
+        t.read_indptr[-1] = 99
+        with pytest.raises(ValueError, match="does not cover read_indices"):
+            t.validate()
+
+    def test_indptr_monotone(self):
+        t = TaskBatch(contexts=np.zeros((3, 1)), origin=np.zeros(3, np.int64),
+                      read_indptr=np.array([0, 1, 1, 2]),
+                      read_indices=np.array([0, 1]))
+        t.read_indptr = np.array([0, 2, 1, 2])  # task 1's slice runs backward
+        with pytest.raises(ValueError, match="non-decreasing: task 1"):
+            t.validate()
+
+    def test_negative_read_key(self):
+        t = _tiny_batch()
+        t.read_indices = np.array([0, -3, 2])
+        with pytest.raises(ValueError, match="must be >= 0"):
+            t.validate()
+
+    def test_read_out_of_range_names_task(self):
+        t = _tiny_batch(read_keys=np.array([0, 1, 7]))
+        with pytest.raises(ValueError,
+                           match=r"out of range for a store with 4 chunks "
+                                 r"\(task 2\)"):
+            t.validate(num_keys=4)
+
+    def test_write_key_sentinel(self):
+        t = _tiny_batch(write_keys=np.array([0, -2, 1]))
+        with pytest.raises(ValueError, match="use -1 for 'writes nothing'"):
+            t.validate()
+
+    def test_origin_range(self):
+        t = _tiny_batch(origin=np.array([0, 5, 0]))
+        with pytest.raises(ValueError, match=r"not a machine id in \[0, 2\)"):
+            t.validate(num_machines=2)
+
+    def test_run_stage_validates(self):
+        store = _tiny_store()
+        sess = Orchestrator(store, engine="tdorch")
+        t = _tiny_batch(read_keys=np.array([0, 1, 99]))
+        with pytest.raises(ValueError, match="out of range"):
+            sess.run_stage(t, _LAMBDAS[1])
+
+
+class TestParityDiagnostics:
+    def _report(self, P=2, words=1.0, rounds=1, name="phase_a"):
+        cost = CostAccumulator(P)
+        cost.begin(name)
+        cost.send(np.array([0]), np.array([1]), words)
+        cost.tick(rounds)
+        cost.end()
+        return cost.totals()
+
+    def test_phase_list_mismatch(self):
+        with pytest.raises(AssertionError, match="phase lists differ"):
+            assert_cost_parity(self._report(name="a"), self._report(name="b"))
+
+    def test_rounds_mismatch_names_phase(self):
+        with pytest.raises(AssertionError, match="phase_a: rounds 1 != 2"):
+            assert_cost_parity(self._report(rounds=1), self._report(rounds=2))
+
+    def test_words_mismatch_names_field(self):
+        with pytest.raises(AssertionError,
+                           match="phase_a: per-machine sent differ"):
+            assert_cost_parity(self._report(words=1.0), self._report(words=2.0))
+
+    def test_session_stage_count(self):
+        a, b = SessionReport(2), SessionReport(2)
+        a.add(self._report())
+        with pytest.raises(AssertionError, match="stage counts differ"):
+            assert_session_parity(a, b)
+
+    def test_session_names_stage_index(self):
+        a, b = SessionReport(2), SessionReport(2)
+        a.add(self._report(words=1.0))
+        b.add(self._report(words=3.0))
+        with pytest.raises(AssertionError, match="stage 0: phase_a"):
+            assert_session_parity(a, b)
+
+
+def test_spmd_more_machines_than_devices_is_loud():
+    store = _tiny_store(P=NDEV + 3)
+    with pytest.raises(RuntimeError, match="needs one device per machine"):
+        Orchestrator(store, engine="pull", backend="jax_spmd")
+    # the message must carry the CPU recipe, device count and machine count
+    try:
+        make_backend("jax_spmd").validate_machines(NDEV + 3)
+    except RuntimeError as e:
+        msg = str(e)
+        assert f"P={NDEV + 3}" in msg
+        assert "xla_force_host_platform_device_count" in msg
+    else:  # pragma: no cover - the raise above is the contract
+        pytest.fail("expected RuntimeError")
