@@ -86,14 +86,21 @@ def _pagerank_cell(quick: bool):
     batch_a = TaskBatch(contexts=ctx_a, read_keys=g.src,
                         write_keys=n + g.dst,
                         origin=TaskBatch.even_origins(g.m, P))
-    # stage B: n rank-apply tasks (read acc, write rank) + n acc resets
-    ctx_b = np.zeros((2 * n, 2))
-    ctx_b[:n, 0] = (1.0 - ALPHA) / n
-    ctx_b[:n, 1] = 1.0
-    keys_b = np.concatenate([np.arange(n) + n, np.full(n, -1, dtype=np.int64)])
-    wk_b = np.concatenate([np.arange(n), np.arange(n) + n]).astype(np.int64)
-    batch_b = TaskBatch(contexts=ctx_b, read_keys=keys_b, write_keys=wk_b,
-                        origin=TaskBatch.even_origins(2 * n, P))
+    # stage B: n rank-apply tasks (read acc, write rank) + n acc resets,
+    # built separately and coalesced (order-preserving priorities, shifted
+    # CSR) — n % P == 0 keeps the round-robin origins identical to building
+    # the 2n-task batch directly
+    ctx_rank = np.zeros((n, 2))
+    ctx_rank[:, 0] = (1.0 - ALPHA) / n
+    ctx_rank[:, 1] = 1.0
+    batch_rank = TaskBatch(contexts=ctx_rank, read_keys=np.arange(n) + n,
+                           write_keys=np.arange(n, dtype=np.int64),
+                           origin=TaskBatch.even_origins(n, P))
+    batch_reset = TaskBatch(contexts=np.zeros((n, 2)),
+                            read_keys=np.full(n, -1, dtype=np.int64),
+                            write_keys=np.arange(n, dtype=np.int64) + n,
+                            origin=TaskBatch.even_origins(n, P))
+    batch_b = TaskBatch.concat([batch_rank, batch_reset])
 
     def make_store():
         store = DataStore.create(2 * n, P, value_width=1, chunk_words=1)

@@ -1,0 +1,148 @@
+"""Streaming-serve benchmark: what does the adaptive batching window buy
+over serving requests one at a time, and does the double-buffered pipeline
+actually overlap routing with execution?
+
+Two cells per backend (numpy oracle, jitted jax), plus one threaded
+open-loop cell:
+
+* **closed loop** (`mode="sync"`, deterministic): the same Zipf GET/RMW
+  request stream served through (a) a batch-size-1 control — every submit
+  fires a single-task stage, the no-batching strawman — and (b) the
+  adaptive window at its defaults. Rows carry per-request wall time; the
+  ``speedup`` metric (control us/req ÷ adaptive us/req) is the headline —
+  wall-clock, so gated only by the capped floor in `check_regression.py`.
+  The adaptive cell also reports deterministic ``words_per_task`` from the
+  session ledger (batch formation in sync mode is seed-deterministic), so
+  the regression gate notices if window coalescing ever changes the
+  orchestration cost.
+* **open loop** (`mode="thread"`): Zipf arrivals at a fixed offered rate
+  against the real router/executor pair. Everything here is timing —
+  sustained ``tasks_per_s_wall``, ``p50_ms_wall`` / ``p99_ms_wall``
+  latency, and the measured route/exec ``overlap_frac_wall`` (> 0 is the
+  double-buffering claim) — named ``*_wall``: informational, never gated.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.kvstore import DistributedHashTable, zipf_keys
+
+from .common import row, timeit
+
+SEED = 23
+BACKENDS = ["numpy", "jax"]
+P, NUM_KEYS, WIDTH = 8, 4_096, 8
+GAMMA = 1.5
+
+
+def _stream(n, seed):
+    rng = np.random.default_rng(seed)
+    keys = zipf_keys(n, NUM_KEYS, gamma=GAMMA, rng=rng)
+    is_rmw = rng.random(n) < 0.10
+    return keys, is_rmw
+
+
+def _table(seed):
+    ht = DistributedHashTable(NUM_KEYS, P, value_width=WIDTH, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    ht.bulk_load(np.arange(NUM_KEYS), rng.random((NUM_KEYS, WIDTH)))
+    return ht
+
+
+def _serve_closed(ht, backend, keys, is_rmw, max_batch):
+    fe = ht.serve(backend=backend, mode="sync",
+                  config={"max_batch": max_batch, "min_window": 1.0,
+                          "max_window": 1.0, "max_queue": max(max_batch, 1 << 16)})
+    for k, w in zip(keys, is_rmw):
+        if w:
+            fe.read_modify_write(int(k), 1.0, 0.5)
+        else:
+            fe.get(int(k))
+    fe.flush()
+    fe.drain()
+    rep = fe.report()
+    fe.close()
+    return rep
+
+
+def _closed_cells(quick: bool):
+    n_ctrl = 192 if quick else 512
+    n_adap = 2_048 if quick else 16_384
+    for backend in BACKENDS:
+        yield backend, n_ctrl, n_adap
+
+
+def run(quick: bool = False):
+    rows = []
+
+    # ---------------- closed loop: adaptive window vs batch-size-1 ----------
+    for backend, n_ctrl, n_adap in _closed_cells(quick):
+        cell = f"serve/closed/zipf{GAMMA}/{backend}"
+        per_req = {}
+        for label, n, max_batch in [("batch1", n_ctrl, 1),
+                                    ("adaptive", n_adap, 256)]:
+            keys, is_rmw = _stream(n, SEED)
+            ht = _table(SEED)
+
+            def call():
+                _serve_closed(ht, backend, keys, is_rmw, max_batch)
+
+            wall = timeit(call, repeats=3, warmup=1)
+            per_req[label] = wall / n
+            metrics = {"wall_ms": wall * 1e3}
+            derived = f"{label};n={n};{per_req[label] * 1e6:.1f}us/req"
+            if label == "adaptive":
+                # deterministic: sync-mode batch formation is a pure
+                # function of the seeded stream, so the session's words
+                # ledger must reproduce bit-identically
+                sess = ht.session(backend=backend)
+                sess.reset_report()
+                rep = _serve_closed(ht, backend, keys, is_rmw, max_batch)
+                wpt = rep["session"]["total_words"] / n
+                metrics["words_per_task"] = wpt
+                derived += f";words_per_task={wpt:.3f}"
+            rows.append(row(f"{cell}/{label}", per_req[label] * 1e6,
+                            derived, seed=SEED, **metrics))
+        sp = per_req["batch1"] / per_req["adaptive"]
+        rows.append(row(f"{cell}/speedup", 0.0,
+                        f"{sp:.1f}x adaptive window vs batch-size-1",
+                        seed=SEED, speedup=sp))
+
+    # ---------------- open loop: threaded double-buffered pipeline ----------
+    # offered rate deliberately sits ABOVE the closed-loop single-session
+    # throughput: a backlog keeps the router preparing batch k+1 while the
+    # executor runs batch k — the regime double buffering exists for
+    n = 3_000 if quick else 20_000
+    rate = 60_000.0 if quick else 80_000.0
+    keys, is_rmw = _stream(n, SEED + 1)
+    ht = _table(SEED + 1)
+    fe = ht.serve(mode="thread",
+                  config={"max_batch": 256, "min_window": 100e-6,
+                          "max_window": 5e-3, "max_queue": 1 << 15})
+    t0 = time.monotonic()
+    for i in range(n):
+        lag = t0 + i / rate - time.monotonic()
+        if lag > 1e-4:
+            time.sleep(lag)
+        if is_rmw[i]:
+            fe.read_modify_write(int(keys[i]), 1.0, 0.5)
+        else:
+            fe.get(int(keys[i]))
+    fe.drain(timeout=120.0)
+    wall = time.monotonic() - t0
+    rep = fe.report()
+    fe.close()
+    rows.append(row(
+        "serve/open/zipf/thread", wall / n * 1e6,
+        (f"{rep['tasks_per_s']:.0f} tasks/s;p99={rep['p99_s'] * 1e3:.1f}ms;"
+         f"overlap={rep['overlap_fraction']:.2f};"
+         f"occupancy={rep['batch_occupancy']:.2f}"),
+        seed=SEED + 1,
+        tasks_per_s_wall=rep["tasks_per_s"],
+        p50_ms_wall=rep["p50_s"] * 1e3,
+        p99_ms_wall=rep["p99_s"] * 1e3,
+        overlap_frac_wall=rep["overlap_fraction"],
+        wall_ms=wall * 1e3))
+    return rows

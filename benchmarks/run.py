@@ -11,6 +11,7 @@
     (beyond) bench_spmd       mesh-sharded backend: shard-count load balance
     (beyond) bench_moe        TD-Orch vs push/pull as the MoE dispatcher
     (beyond) bench_kernels    per-kernel microbenchmarks
+    (beyond) bench_serve      streaming serve: adaptive batching + overlap
 
 Prints ``name,us_per_call,derived`` CSV. `--quick` shrinks sizes ~10×.
 `--json PATH` writes schema-versioned per-suite row files (fixed seeds, so
@@ -25,7 +26,7 @@ import time
 
 from . import (bench_ablation, bench_backend, bench_breakdown, bench_graph,
                bench_kernels, bench_moe, bench_plan, bench_scaling,
-               bench_skew, bench_spmd, bench_ycsb)
+               bench_serve, bench_skew, bench_spmd, bench_ycsb)
 from .common import print_csv, write_json
 
 SUITES = {
@@ -40,6 +41,7 @@ SUITES = {
     "ablation": bench_ablation,
     "moe": bench_moe,
     "kernels": bench_kernels,
+    "serve": bench_serve,
 }
 
 

@@ -100,6 +100,20 @@ class NumpyBackend:
     def plan_flush(self) -> None:
         """Make the host store copy current (no-op when nothing deferred)."""
 
+    # -- non-blocking dispatch hooks (serve.Frontend double-buffering) -----
+    def prefetch(self, tasks, store) -> None:
+        """Stage the batch's device operands ahead of `execute()` without
+        blocking: a serving frontend calls this from its admission thread
+        for batch k+1 while batch k is still computing, so the upload rides
+        the async dispatch stream instead of the executor's critical path.
+        Callers must not mutate `tasks.contexts` between prefetch and
+        execute. No-op for the host-resident oracle."""
+
+    def sync(self, store=None) -> None:
+        """Block until pending device work (for `store`'s cached values, if
+        given) has completed — a fair timing boundary for serving/benchmark
+        layers. No-op for the host-resident oracle."""
+
     # -- phase 3 -----------------------------------------------------------
     def execute(self, tasks, store, f: Callable, merge: Optional[MergeOp] = None,
                 want_result: bool = True, exec_site=None,
@@ -246,6 +260,26 @@ class JaxBackend(NumpyBackend):
     def _di(self, arr):
         return self._jnp.asarray(np.asarray(arr).astype(np.int32, copy=False))
 
+    # -- non-blocking dispatch hooks ----------------------------------------
+    def prefetch(self, tasks, store) -> None:
+        """Enqueue the batch's context upload on the async dispatch stream;
+        `execute()` picks the staged array up when the batch arrives
+        un-padded (plan-scope bucketing re-pads, so padded paths rebuild
+        from host). Only the batch-owned contexts are staged — never the
+        store's values: a concurrent `write_rows` on the executor thread
+        could tear that snapshot, and the executor's own `_device_values`
+        is version-checked exactly to own it."""
+        if tasks.n == 0:
+            return
+        ctx_np = np.asarray(tasks.contexts).astype(self._np_dtype, copy=False)
+        tasks.__dict__["_device_ctx"] = (self.dtype, self._jnp.asarray(ctx_np))
+
+    def sync(self, store=None) -> None:
+        if store is not None:
+            ent = store.__dict__.get("_device_values", {}).get(self.dtype)
+            if ent is not None:
+                self._jax.block_until_ready(ent[1])
+
     # -- phase 3 (+ fused phase-4 ⊗) ---------------------------------------
     def execute(self, tasks, store, f: Callable, merge: Optional[MergeOp] = None,
                 want_result: bool = True, exec_site=None,
@@ -293,7 +327,11 @@ class JaxBackend(NumpyBackend):
             pad = np.zeros((n_pad,) + ctx_np.shape[1:], dtype=self._np_dtype)
             pad[:n] = ctx_np
             ctx_np = pad
-        ctx = self._jnp.asarray(ctx_np)
+        pre = tasks.__dict__.pop("_device_ctx", None)
+        if n_pad == n and pre is not None and pre[0] == self.dtype:
+            ctx = pre[1]  # staged by prefetch(); already on device
+        else:
+            ctx = self._jnp.asarray(ctx_np)
         fwd = execution._accepts_mask(f)
         kw = dict(f=f, fwd_mask=fwd, merge_name=merge_name, combine=combine,
                   want_update=want_update, want_result=want_result)
@@ -506,6 +544,11 @@ class SpmdBackend(JaxBackend):
     def reset_stats(self) -> list:
         out, self.stage_stats = self.stage_stats, []
         return out
+
+    def prefetch(self, tasks, store) -> None:
+        """Sharded stages materialize per-shard operands inside the stage
+        program from the host copy — there is no whole-batch device upload
+        to stage ahead, so this stays a no-op."""
 
     # -- phase 3 (sharded) + fused phase-4 ----------------------------------
     def execute(self, tasks, store, f: Callable, merge: Optional[MergeOp] = None,

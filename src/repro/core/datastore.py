@@ -327,6 +327,55 @@ class TaskBatch:
         out[has] = self.read_indices[self.read_indptr[:-1][has]]
         return out
 
+    @classmethod
+    def concat(cls, batches, store: "DataStore | None" = None) -> "TaskBatch":
+        """Merge ragged CSR batches into one, preserving order: batch j's
+        tasks precede batch j+1's, CSR offsets are shifted onto one
+        `read_indices` array, and priorities are rebased (order-preserving,
+        per batch, each batch offset past the previous one) so Definition 2
+        write races resolve exactly as "batch j before batch j+1, original
+        order within each batch" — what a serving coalescer needs when it
+        merges admission windows. Context widths and `ctx_words` must agree
+        across batches. The result is `validate()`-checked (against `store`
+        when given) before it is returned, so a bad offset surfaces here,
+        not deep inside an engine."""
+        batches = list(batches)
+        if not batches:
+            raise ValueError("TaskBatch.concat needs at least one batch")
+        widths = {b.contexts.shape[1:] for b in batches}
+        if len(widths) > 1:
+            raise ValueError(
+                f"TaskBatch.concat: context widths differ across batches "
+                f"({sorted(widths)}) — coalesce only like-shaped tasks")
+        sigmas = {int(b.ctx_words) for b in batches}
+        if len(sigmas) > 1:
+            raise ValueError(
+                f"TaskBatch.concat: ctx_words differ across batches "
+                f"({sorted(sigmas)})")
+        indptr_parts, off = [batches[0].read_indptr], 0
+        for b in batches[1:]:
+            off += batches[len(indptr_parts) - 1].nnz
+            indptr_parts.append(b.read_indptr[1:] + off)
+        pr_parts, pr_off = [], 0
+        for b in batches:
+            p = np.asarray(b.priority, dtype=np.int64)
+            if p.size:
+                # order-preserving rebase: priorities are ordinal (lowest
+                # wins), so only relative order within a batch is kept
+                p = p - p.min() + pr_off
+                pr_off = int(p.max()) + 1
+            pr_parts.append(p)
+        out = cls(
+            contexts=np.concatenate([b.contexts for b in batches]),
+            origin=np.concatenate([b.origin for b in batches]),
+            write_keys=np.concatenate([b.write_keys for b in batches]),
+            priority=np.concatenate(pr_parts),
+            read_indptr=np.concatenate(indptr_parts),
+            read_indices=np.concatenate([b.read_indices for b in batches]),
+            ctx_words=batches[0].ctx_words,
+        )
+        return out.validate(store)
+
     @staticmethod
     def from_ragged(contexts, key_lists, origin, **kw) -> "TaskBatch":
         """Build a multi-get batch from per-task key sequences."""

@@ -106,6 +106,25 @@ class Orchestrator:
         return self.replicator.replicas if self.replicator is not None else None
 
     # ------------------------------------------------------------------
+    def fork(self) -> "Orchestrator":
+        """A sibling session over the same store that SHARES the engine
+        instance (and with it the CommForest and the backend's device
+        caches) and the replication state, while accumulating its own
+        `SessionReport`.
+
+        This is the double-buffer handoff `repro.serve.Frontend` is built
+        on: batch k executes on one buffer while batch k+1 is admitted,
+        coalesced, and staged against the other, and the pair behaves like
+        a single long-lived session — one forest plan, one device-resident
+        value cache, one demand histogram — with per-buffer cost ledgers.
+        Stages on the two buffers must not run concurrently (the engine's
+        execute→apply carry is single-slot); a serving frontend serializes
+        execution and overlaps only the host-side admission work.
+        """
+        return Orchestrator(self.store, engine=self.engine,
+                            replication=self.replicator)
+
+    # ------------------------------------------------------------------
     def run_stage(
         self,
         tasks: TaskBatch,

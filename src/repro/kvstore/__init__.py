@@ -1,13 +1,14 @@
 # Case Study I (§4): a distributed key-value store (concurrent hash table)
 # built directly on the task-data orchestration interface, plus the YCSB
 # workload generators (A/B/C/LOAD with Zipf-distributed key access).
-from .hashtable import (ChainResult, DistributedHashTable, KVResult,
-                        MultiGetResult)
+from .hashtable import (ChainResult, DistributedHashTable, KVFrontend,
+                        KVResult, MultiGetResult)
 from .ycsb import (YCSB_WORKLOADS, YCSBWorkload, make_ycsb_batch,
                    make_ycsb_stream, zipf_keys, zipf_keys_stationary)
 
 __all__ = [
-    "ChainResult", "DistributedHashTable", "KVResult", "MultiGetResult",
+    "ChainResult", "DistributedHashTable", "KVFrontend", "KVResult",
+    "MultiGetResult",
     "YCSB_WORKLOADS", "YCSBWorkload", "make_ycsb_batch",
     "make_ycsb_stream", "zipf_keys", "zipf_keys_stationary",
 ]

@@ -23,6 +23,7 @@ import numpy as np
 
 from ..core import (CARRY, DataStore, OrchestrationResult, Orchestrator,
                     ReplicationConfig, SessionReport, StagePlan, TaskBatch)
+from ..serve import Frontend, RequestFuture  # noqa: F401 (RequestFuture: API)
 
 
 def _muladd_lambda(contexts: np.ndarray, in_vals: np.ndarray) -> Dict[str, np.ndarray]:
@@ -323,6 +324,28 @@ class DistributedHashTable:
         return MultiGetResult(values=values, mask=mask, report=res.report,
                               refcount=res.refcount)
 
+    # ---- streaming serving mode (repro.serve) ------------------------------
+    def serve(self, *, engine: str = "tdorch", backend=None, replicate=None,
+              config=None, mode: str = "thread", double_buffer: bool = True,
+              **kw) -> "KVFrontend":
+        """The table's streaming front door: a `repro.serve.Frontend` over a
+        pinned session pair, admitting GET / read-modify-write / MULTI-GET
+        requests one at a time and coalescing them into the exact batches
+        `execute_batch` / `multi_get` would build — so per-request results
+        are bit-identical to the one-shot path for the same request
+        sequence.
+
+        `engine=`/`backend=`/`replicate=` select the session exactly as
+        `session()` does (the frontend forks it for the second buffer);
+        `config` takes `repro.serve.BatchingConfig` knobs (or a dict);
+        `mode="sync"` runs the pipeline inline and deterministic, `"thread"`
+        (default) runs the double-buffered router/executor pair. Close the
+        frontend (or use it as a context manager) when done.
+        """
+        sess = self.session(engine, replicate=replicate, backend=backend)
+        return KVFrontend(self, sess, config=config, mode=mode,
+                          double_buffer=double_buffer, **kw)
+
     # ---- sequential oracle for tests --------------------------------------
     @staticmethod
     def oracle(values, keys, is_read, operand):
@@ -337,3 +360,40 @@ class DistributedHashTable:
                 values[k] = snapshot[k] * operand[i, 0] + operand[i, 1]
                 written[k] = True
         return values, results
+
+
+class KVFrontend(Frontend):
+    """`repro.serve.Frontend` specialized to the hash table's §4 request
+    kinds (built by `DistributedHashTable.serve()`):
+
+    * ``get(key)`` — future of the key's `(value_width,)` row;
+    * ``read_modify_write(key, mul, add)`` — the §4 multiply-and-add UPDATE;
+      future of the *pre-update* row (first-writer-wins within a batch,
+      exactly `execute_batch`'s semantics);
+    * ``multi_get(keys)`` — ragged multi-get; future of the
+      `(len(keys), value_width)` gathered rows.
+
+    GETs and RMWs share one ``"kv"`` tag (one lambda, so they coalesce into
+    the same batches `execute_batch` builds); multi-gets ride the separate
+    ``"mget"`` tag with the `multi_get` flatten lambda.
+    """
+
+    def __init__(self, table: DistributedHashTable, session, **kw):
+        super().__init__(session, **kw)
+        self.table = table
+        self.register("kv", _muladd_lambda, write_back="write", ctx_width=3,
+                      result="row")
+        self.register("mget", _flatten_lambda, write_back="add", ctx_width=1,
+                      result="ragged")
+
+    def get(self, key: int, *, deadline=None) -> "RequestFuture":
+        return self.submit("kv", [key], ctx=[1.0, 1.0, 0.0],
+                           deadline=deadline)
+
+    def read_modify_write(self, key: int, mul: float, add: float, *,
+                          deadline=None) -> "RequestFuture":
+        return self.submit("kv", [key], ctx=[0.0, float(mul), float(add)],
+                           write_key=int(key), deadline=deadline)
+
+    def multi_get(self, keys, *, deadline=None) -> "RequestFuture":
+        return self.submit("mget", keys, deadline=deadline)

@@ -33,3 +33,18 @@ def test_doc_code_blocks_execute(path):
     for i, block in enumerate(blocks):
         code = compile(block, f"{path.name}[python block {i}]", "exec")
         exec(code, ns)  # noqa: S102 — executing our own documentation
+
+
+def test_serve_example_runs():
+    """The README's streaming-serve walkthrough points at
+    examples/serve_kv.py; keep it runnable end to end (quick stream)."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    out = subprocess.run(
+        [sys.executable, str(REPO / "examples" / "serve_kv.py"), "--quick"],
+        capture_output=True, text=True, timeout=600, env=env, cwd=REPO)
+    assert out.returncode == 0, out.stderr
+    assert "served 2000/2000 requests" in out.stdout, out.stdout

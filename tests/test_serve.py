@@ -1,0 +1,516 @@
+"""The streaming serve subsystem (`repro.serve`): trigger semantics of the
+adaptive batching window (size-fires-before-deadline AND the reverse, pinned
+with a fake clock — no sleeps), per-request result integrity against the
+one-shot batch oracle across all three backends, `TaskBatch.concat`
+geometry, double-buffered session ledgers, and bounded-queue backpressure
+(loud `QueueFullError`, never a silent drop).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import DataStore, Orchestrator, TaskBatch
+from repro.kvstore import DistributedHashTable
+from repro.serve import (BatchingConfig, BatchWindow, Frontend,
+                         FrontendClosedError, QueueFullError, RequestFuture,
+                         ServeRequest)
+
+NDEV = len(jax.devices())
+BACKENDS = ["numpy", "jax", "jax_spmd"]
+
+
+class FakeClock:
+    """Injectable monotonic time for deterministic trigger tests."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+def _req(tag="t", keys=(0,), t_submit=0.0, deadline=None):
+    fut = RequestFuture(tag, 0, t_submit, deadline)
+    return ServeRequest(tag=tag, keys=np.asarray(keys, dtype=np.int64),
+                        ctx=np.zeros(1), write_key=-1, future=fut,
+                        t_submit=t_submit, deadline=deadline)
+
+
+def _table(P=4, K=256, w=2, seed=3):
+    ht = DistributedHashTable(num_keys=K, num_machines=P, value_width=w,
+                              seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    vals = rng.random((K, w))
+    ht.bulk_load(np.arange(K), vals)
+    return ht, vals
+
+
+# ---------------------------------------------------------------------------
+# BatchWindow trigger semantics (pure host logic, fake clock)
+# ---------------------------------------------------------------------------
+class TestBatchWindow:
+    def test_size_fires_before_deadline(self):
+        # a burst arriving well inside the adaptive window fires on SIZE the
+        # instant the batch fills, not when the deadline would come due
+        cfg = BatchingConfig(max_batch=4, min_window=1.0, max_window=1.0)
+        win = BatchWindow(cfg)
+        for i in range(3):
+            win.push(_req(t_submit=i * 1e-4), now=i * 1e-4)
+            assert not win.ready(now=i * 1e-4)
+        win.push(_req(t_submit=3e-4), now=3e-4)
+        assert win.ready(now=3e-4)  # full, long before t=1.0
+        assert win.depth == cfg.max_batch
+
+    def test_deadline_fires_before_size(self):
+        # a trickle never reaches max_batch; the oldest request's age
+        # reaching the adaptive window fires the batch instead
+        cfg = BatchingConfig(max_batch=64, min_window=0.01, max_window=0.01)
+        win = BatchWindow(cfg)
+        win.push(_req(t_submit=0.0), now=0.0)
+        win.push(_req(t_submit=0.004), now=0.004)
+        assert not win.ready(now=0.009)
+        assert win.next_due(now=0.004) == pytest.approx(0.01)
+        assert win.ready(now=0.01)
+        assert win.depth == 2  # fires small: latency-bound, not size-bound
+
+    def test_window_adapts_to_arrival_rate(self):
+        # cold window starts at max_window; a fast stream shrinks it toward
+        # gap * max_batch; the floor clamps it at min_window
+        cfg = BatchingConfig(max_batch=10, min_window=1e-5, max_window=5.0,
+                             rate_halflife=2.0)
+        win = BatchWindow(cfg)
+        assert win.window == 5.0
+        t = 0.0
+        for _ in range(200):  # 1 kHz arrivals -> est 10 * 1ms = 10 ms
+            win.push(_req(t_submit=t), now=t)
+            win.take(now=t)  # keep depth at 0; only the rate EWMA matters
+            t += 1e-3
+        assert win.window == pytest.approx(10 * 1e-3, rel=0.05)
+        for _ in range(400):  # 1 MHz arrivals -> floor
+            win.push(_req(t_submit=t), now=t)
+            win.take(now=t)
+            t += 1e-6
+        assert win.window == pytest.approx(cfg.min_window, rel=1e-6)
+
+    def test_slo_deadline_pulls_fire_earlier(self):
+        # an explicit SLO inside the adaptive window moves the fire instant
+        # to deadline - EWMA(service), ahead of the age trigger
+        cfg = BatchingConfig(max_batch=64, min_window=1.0, max_window=1.0)
+        win = BatchWindow(cfg)
+        win.note_service(0.1)
+        win.push(_req(t_submit=0.0, deadline=0.5), now=0.0)
+        assert win.next_due(now=0.0) == pytest.approx(0.4)
+        assert not win.ready(now=0.39)
+        assert win.ready(now=0.41)
+        # taking the batch clears the SLO horizon
+        win.take(now=0.41)
+        assert win.next_due(now=0.41) is None
+
+    def test_take_admission_order_and_cap(self):
+        cfg = BatchingConfig(max_batch=3, max_queue=16)
+        win = BatchWindow(cfg)
+        reqs = [_req(keys=(i,), t_submit=0.0) for i in range(5)]
+        for r in reqs:
+            win.push(r, now=0.0)
+        out = win.take(now=0.0)
+        assert [int(r.keys[0]) for r in out] == [0, 1, 2]
+        assert win.depth == 2
+
+    def test_backpressure_is_loud(self):
+        cfg = BatchingConfig(max_batch=4, max_queue=4)
+        win = BatchWindow(cfg)
+        for i in range(4):
+            win.push(_req(t_submit=0.0), now=0.0)
+        with pytest.raises(QueueFullError, match="full"):
+            win.push(_req(t_submit=0.0), now=0.0)
+        assert win.depth == 4  # nothing silently dropped
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="max_batch"):
+            BatchingConfig(max_batch=0)
+        with pytest.raises(ValueError, match="max_queue"):
+            BatchingConfig(max_batch=64, max_queue=32)
+        with pytest.raises(ValueError, match="min_window"):
+            BatchingConfig(min_window=2e-3, max_window=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# TaskBatch.concat
+# ---------------------------------------------------------------------------
+class TestConcat:
+    def _ragged(self, groups, K=32, P=4, ctx0=0.0):
+        n = len(groups)
+        return TaskBatch.from_ragged(np.full((n, 1), ctx0), groups,
+                                     TaskBatch.even_origins(n, P))
+
+    def test_offsets_and_order(self):
+        a = self._ragged([[1, 2], [3]], ctx0=1.0)
+        b = self._ragged([[4], [], [5, 6, 7]], ctx0=2.0)
+        store = DataStore.create(32, 4, value_width=1, chunk_words=1)
+        out = TaskBatch.concat([a, b], store)
+        assert out.n == 5
+        np.testing.assert_array_equal(out.read_indptr, [0, 2, 3, 4, 4, 7])
+        np.testing.assert_array_equal(out.read_indices, [1, 2, 3, 4, 5, 6, 7])
+        np.testing.assert_array_equal(out.contexts[:, 0], [1, 1, 2, 2, 2])
+        # order-preserving priorities: a's tasks strictly before b's
+        assert out.priority[:2].max() < out.priority[2:].min()
+        np.testing.assert_array_equal(np.argsort(out.priority, kind="stable"),
+                                      np.arange(5))
+
+    def test_matches_from_ragged(self):
+        # concat of two windows == building the union window directly
+        groups = [[0, 1], [2], [3, 4, 5], [6], [], [7, 7]]
+        whole = self._ragged(groups)
+        parts = [self._ragged(groups[:3]), self._ragged(groups[3:])]
+        cat = TaskBatch.concat(parts)
+        np.testing.assert_array_equal(cat.read_indptr, whole.read_indptr)
+        np.testing.assert_array_equal(cat.read_indices, whole.read_indices)
+        np.testing.assert_array_equal(cat.priority, whole.priority)
+
+    def test_width_mismatch_rejected(self):
+        a = TaskBatch(contexts=np.zeros((2, 2)), read_keys=np.arange(2),
+                      origin=np.zeros(2, dtype=np.int64))
+        b = TaskBatch(contexts=np.zeros((2, 3)), read_keys=np.arange(2),
+                      origin=np.zeros(2, dtype=np.int64))
+        with pytest.raises(ValueError, match="context widths"):
+            TaskBatch.concat([a, b])
+
+    def test_empty_rejected_and_validated(self):
+        with pytest.raises(ValueError, match="at least one"):
+            TaskBatch.concat([])
+        bad = self._ragged([[40]])  # key 40 out of range for a 32-key store
+        store = DataStore.create(32, 4, value_width=1, chunk_words=1)
+        with pytest.raises(ValueError):
+            TaskBatch.concat([bad], store)
+
+
+# ---------------------------------------------------------------------------
+# Frontend: sync mode (deterministic, fake clock)
+# ---------------------------------------------------------------------------
+class TestFrontendSync:
+    def _frontend(self, clk, **cfg):
+        ht, vals = _table()
+        fe = ht.serve(mode="sync", config=cfg, clock=clk)
+        return ht, vals, fe
+
+    def test_size_trigger_end_to_end(self):
+        clk = FakeClock()
+        ht, vals, fe = self._frontend(clk, max_batch=4, min_window=10.0,
+                                      max_window=10.0)
+        futs = [fe.get(k) for k in (1, 2, 3)]
+        assert not any(f.done() for f in futs)  # below max_batch, window open
+        futs.append(fe.get(4))  # fills the batch -> fires inline
+        assert all(f.done() for f in futs)
+        assert fe.stats.batches_by_trigger["size"] == 1
+        for k, f in zip((1, 2, 3, 4), futs):
+            np.testing.assert_array_equal(f.result(), vals[k])
+        fe.close()
+
+    def test_deadline_trigger_end_to_end(self):
+        clk = FakeClock()
+        ht, vals, fe = self._frontend(clk, max_batch=64, min_window=0.01,
+                                      max_window=0.01)
+        f = fe.get(7)
+        assert not f.done()
+        clk.advance(0.02)
+        fe.pump()  # oldest request aged out the window
+        assert f.done()
+        assert fe.stats.batches_by_trigger["deadline"] == 1
+        np.testing.assert_array_equal(f.result(), vals[7])
+        fe.close()
+
+    def test_result_timeout_and_slo_miss(self):
+        clk = FakeClock()
+        ht, vals, fe = self._frontend(clk, max_batch=64, min_window=5.0,
+                                      max_window=5.0)
+        f = fe.get(1)
+        with pytest.raises(TimeoutError):
+            f.result(timeout=0.01)  # batch not fired yet
+        # an already-blown SLO fires (and resolves) immediately, and the
+        # resolution is billed as a deadline miss
+        g = fe.get(2, deadline=-1.0)
+        assert g.done() and f.done()  # same window: f rides along
+        assert fe.stats.deadline_misses >= 1
+        fe.close()
+
+    def test_rmw_visibility_across_batches(self):
+        clk = FakeClock()
+        ht, vals, fe = self._frontend(clk, max_batch=2, min_window=1.0,
+                                      max_window=1.0)
+        f0 = fe.read_modify_write(9, 2.0, 1.0)
+        f1 = fe.get(9)  # same batch: sees the PRE-write value (one stage,
+        np.testing.assert_array_equal(f0.result(), vals[9])  # BSP write-back)
+        np.testing.assert_array_equal(f1.result(), vals[9])
+        g = fe.get(9)
+        fe.flush()  # next batch: write is visible
+        np.testing.assert_allclose(g.result(), vals[9] * 2.0 + 1.0)
+        fe.close()
+
+    def test_errors_reject_batch_and_serving_continues(self):
+        ht, vals, fe = self._frontend(FakeClock(), max_batch=2,
+                                      min_window=1.0, max_window=1.0)
+
+        def _boom(contexts, in_vals):
+            raise RuntimeError("lambda exploded")
+
+        fe.register("boom", _boom, ctx_width=1)
+        f1 = fe.submit("boom", [1])
+        f2 = fe.submit("boom", [2])  # fires; both futures get the error
+        for f in (f1, f2):
+            with pytest.raises(RuntimeError, match="exploded"):
+                f.result()
+        assert fe.stats.failed == 2
+        ok = fe.get(5)
+        fe.flush()
+        np.testing.assert_array_equal(ok.result(), vals[5])
+        fe.close()
+
+    def test_admission_errors(self):
+        ht, vals, fe = self._frontend(FakeClock(), max_batch=4)
+        with pytest.raises(KeyError, match="unregistered"):
+            fe.submit("nope", [1])
+        with pytest.raises(ValueError, match="already registered"):
+            fe.register("kv", lambda c, v: {"result": v})
+        fe.close()
+        with pytest.raises(FrontendClosedError):
+            fe.get(1)
+
+    def test_close_without_drain_rejects_pending(self):
+        ht, vals, fe = self._frontend(FakeClock(), max_batch=64,
+                                      min_window=5.0, max_window=5.0)
+        f = fe.get(3)
+        fe.close(drain=False)
+        with pytest.raises(FrontendClosedError):
+            f.result()
+        assert fe.stats.failed == 1
+
+    def test_double_buffer_ledgers(self):
+        # batches alternate buffers; each session keeps its own cost ledger
+        # while the serve report folds both back together
+        clk = FakeClock()
+        ht, vals, fe = self._frontend(clk, max_batch=2, min_window=1.0,
+                                      max_window=1.0)
+        for k in range(8):
+            fe.get(k % 4)
+        assert len(fe.sessions) == 2
+        assert fe.sessions[1].engine is fe.sessions[0].engine  # shared plan
+        assert fe.sessions[0].report.num_stages == 2
+        assert fe.sessions[1].report.num_stages == 2
+        rep = fe.report()
+        assert rep["session"]["stages"] == 4
+        assert rep["completed"] == 8
+        assert rep["batch_occupancy"] == pytest.approx(1.0)
+        fe.close()
+
+    def test_single_buffer_opt_out(self):
+        ht, vals = _table()
+        fe = ht.serve(mode="sync", double_buffer=False,
+                      config={"max_batch": 2})
+        assert len(fe.sessions) == 1
+        f = fe.get(1)
+        fe.flush()
+        np.testing.assert_array_equal(f.result(), vals[1])
+        fe.close()
+
+
+# ---------------------------------------------------------------------------
+# Per-request integrity vs the one-shot batch oracle, all three backends
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestOracleParity:
+    def _P(self, backend):
+        return min(4, NDEV) if backend == "jax_spmd" else 4
+
+    def test_single_batch_bit_identical(self, backend):
+        # the acceptance pin: a frontend-coalesced window must produce the
+        # EXACT batch `execute_batch` hand-builds, so per-request results are
+        # bit-identical on every backend (same dtype, same kernel, same
+        # priorities) — table B is the oracle twin of table A
+        P = self._P(backend)
+        ht_a, vals = _table(P=P)
+        ht_b, _ = _table(P=P)
+        rng = np.random.default_rng(0)
+        n = 24
+        keys = rng.integers(0, 256, n)
+        is_read = rng.random(n) < 0.5
+        operand = np.where(is_read[:, None], [1.0, 0.0],
+                           rng.random((n, 2)))
+        fe = ht_a.serve(backend=backend, mode="sync",
+                        config={"max_batch": n, "min_window": 1.0,
+                                "max_window": 1.0})
+        futs = []
+        for i in range(n):
+            if is_read[i]:
+                futs.append(fe.get(int(keys[i])))
+            else:
+                futs.append(fe.read_modify_write(int(keys[i]),
+                                                 operand[i, 0], operand[i, 1]))
+        fe.flush()
+        assert fe.stats.batches == 1
+        oracle = ht_b.execute_batch(keys, is_read, operand, backend=backend)
+        got = np.stack([f.result() for f in futs])
+        np.testing.assert_array_equal(got, oracle.values)
+        np.testing.assert_array_equal(ht_a.values, ht_b.values)
+        fe.close()
+
+    def test_multi_get_matches_oracle(self, backend):
+        P = self._P(backend)
+        ht, vals = _table(P=P)
+        rng = np.random.default_rng(1)
+        groups = [list(rng.integers(0, 256, rng.integers(1, 6)))
+                  for _ in range(12)]
+        fe = ht.serve(backend=backend, mode="sync",
+                      config={"max_batch": len(groups), "min_window": 1.0,
+                              "max_window": 1.0})
+        futs = [fe.multi_get(g) for g in groups]
+        fe.flush()
+        oracle = ht.multi_get(groups, backend=backend)
+        for i, (g, f) in enumerate(zip(groups, futs)):
+            got = f.result()
+            assert got.shape == (len(g), ht.store.value_width)
+            np.testing.assert_array_equal(
+                got, oracle.values[i][oracle.mask[i]].reshape(len(g), -1))
+        fe.close()
+
+    def test_sliced_stream_equals_one_shot(self, backend):
+        # a read-only stream chopped into many small batches must return
+        # exactly what one big batch returns: batching is invisible to reads
+        P = self._P(backend)
+        ht, vals = _table(P=P)
+        rng = np.random.default_rng(2)
+        keys = rng.integers(0, 256, 40)
+        fe = ht.serve(backend=backend, mode="sync",
+                      config={"max_batch": 4, "min_window": 1.0,
+                              "max_window": 1.0})
+        futs = [fe.get(int(k)) for k in keys]
+        fe.flush()
+        assert fe.stats.batches == 10
+        oracle = ht.execute_batch(keys, np.ones(40, dtype=bool),
+                                  np.tile([1.0, 0.0], (40, 1)),
+                                  backend=backend)
+        np.testing.assert_array_equal(np.stack([f.result() for f in futs]),
+                                      oracle.values)
+        fe.close()
+
+
+# ---------------------------------------------------------------------------
+# Thread mode: the real double-buffered pipeline
+# ---------------------------------------------------------------------------
+class TestFrontendThread:
+    def test_stream_resolves_correctly(self):
+        ht, vals = _table(K=512)
+        with ht.serve(mode="thread",
+                      config={"max_batch": 32, "min_window": 1e-4,
+                              "max_window": 1e-3}) as fe:
+            rng = np.random.default_rng(5)
+            futs = [(int(k), fe.get(int(k)))
+                    for k in rng.integers(0, 512, 300)]
+            fe.drain(timeout=30.0)
+            for k, f in futs:
+                np.testing.assert_array_equal(f.result(timeout=5.0), vals[k])
+            rep = fe.report()
+        assert rep["completed"] == 300
+        assert rep["failed"] == rep["rejected"] == 0
+        assert rep["batches"] >= 300 // 32
+
+    def test_staged_merge_uses_concat(self):
+        # hold the executor inside batch 1's lambda; window 2 stages, window
+        # 3 must MERGE into it (TaskBatch.concat) instead of queueing deeper
+        store = DataStore.create(64, 4, value_width=2, chunk_words=2)
+        rng = np.random.default_rng(6)
+        vals = rng.random((64, 2))
+        store.write_rows(np.arange(64), vals)
+        started, release = threading.Event(), threading.Event()
+
+        def gate(contexts, in_vals):
+            started.set()
+            release.wait(timeout=30.0)
+            return {"result": in_vals}
+
+        fe = Frontend(Orchestrator(store), config={"max_batch": 8},
+                      mode="thread")
+        fe.register("g", gate, ctx_width=1)
+        try:
+            f1 = [fe.submit("g", [k]) for k in (0, 1)]
+            fe.flush()  # batch 1 -> executor (blocks in gate)
+            assert started.wait(timeout=10.0)
+            f2 = [fe.submit("g", [k]) for k in (2, 3)]
+            fe.flush()  # batch 2 -> staged slot
+            f3 = [fe.submit("g", [k]) for k in (4, 5)]
+            fe.flush()  # batch 3 -> merges into staged batch 2
+            deadline = time.monotonic() + 10.0
+            while fe.stats.merged_batches < 1:
+                assert time.monotonic() < deadline, "merge never happened"
+                time.sleep(0.002)
+        finally:
+            release.set()
+        fe.drain(timeout=30.0)
+        for k, f in enumerate(f1 + f2 + f3):
+            np.testing.assert_array_equal(f.result(timeout=5.0), vals[k])
+        assert fe.stats.merged_batches == 1
+        assert fe.stats.batches == 3  # merge doesn't double-count batches
+        fe.close()
+
+    def test_backpressure_queue_full_is_loud(self):
+        # a deliberately slow lambda: the offered load outruns the executor,
+        # the bounded ingest queue fills, and admission FAILS LOUDLY with
+        # QueueFullError — every accepted request still resolves
+        store = DataStore.create(64, 4, value_width=1, chunk_words=1)
+        store.write_rows(np.arange(64), np.arange(64, dtype=float)[:, None])
+
+        def slow(contexts, in_vals):
+            time.sleep(0.05)
+            return {"result": in_vals}
+
+        fe = Frontend(Orchestrator(store),
+                      config={"max_batch": 4, "max_queue": 16,
+                              "min_window": 1e-5, "max_window": 1e-4},
+                      mode="thread")
+        fe.register("slow", slow, ctx_width=1)
+        accepted, rejected = [], 0
+        for i in range(1000):
+            try:
+                accepted.append((i % 64, fe.submit("slow", [i % 64])))
+            except QueueFullError:
+                rejected += 1
+                break  # overload signalled on the submitting thread
+        assert rejected, "queue never filled: backpressure path untested"
+        assert fe.stats.rejected == rejected
+        fe.drain(timeout=60.0)
+        for k, f in accepted:  # accepted requests are never dropped
+            assert f.result(timeout=10.0)[0] == float(k)
+        assert fe.report()["completed"] == len(accepted)
+        fe.close()
+
+    def test_overlap_is_measured(self):
+        # enough batches back-to-back that the router's prepare of batch k+1
+        # overlaps the executor's run of batch k at least once
+        ht, vals = _table(K=512)
+        fe = ht.serve(mode="thread",
+                      config={"max_batch": 16, "min_window": 1e-5,
+                              "max_window": 1e-4})
+        rng = np.random.default_rng(7)
+        for k in rng.integers(0, 512, 600):
+            fe.get(int(k))
+        fe.drain(timeout=30.0)
+        rep = fe.report()
+        fe.close()
+        assert rep["completed"] == 600
+        assert rep["overlap_fraction"] >= 0.0  # measured, finite
+        assert rep["batches"] >= 600 // 16
+
+    def test_close_is_idempotent(self):
+        ht, _ = _table()
+        fe = ht.serve(mode="thread")
+        fe.get(1)
+        fe.close()
+        fe.close()
+        assert not any(t.is_alive() for t in fe._threads)
