@@ -11,6 +11,7 @@ from .datastore import DataStore, ShardLayout, TaskBatch
 from .engine import OrchestrationResult, TDOrchEngine
 from .baselines import DirectPullEngine, DirectPushEngine, SortBasedEngine
 from .execution import gather_values
+from .fusedlam import FUSED_READ_OPS, FusedStageLambda, fused_read
 from .interface import ENGINES, make_engine, orchestration, register_engine
 from .mergeops import MERGE_OPS, MergeOp, get_merge_op
 from .plan import CARRY, LoopRecord, PlanResult, PlanState, StagePlan
@@ -27,6 +28,7 @@ __all__ = [
     "OrchestrationResult", "TDOrchEngine",
     "DirectPullEngine", "DirectPushEngine", "SortBasedEngine",
     "gather_values",
+    "FUSED_READ_OPS", "FusedStageLambda", "fused_read",
     "ENGINES", "make_engine", "orchestration", "register_engine",
     "MERGE_OPS", "MergeOp", "get_merge_op",
     "CARRY", "LoopRecord", "PlanResult", "PlanState", "StagePlan",

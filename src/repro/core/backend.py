@@ -168,7 +168,12 @@ class JaxBackend(NumpyBackend):
 
     name = "jax"
 
-    def __init__(self, dtype: str = "float32"):
+    # how Phase-3/4 numerics reach the kernel tree for fused-able lambdas
+    # (`core/fusedlam.FusedStageLambda`); "padded" is the legacy opt-out
+    KERNEL_BACKENDS = ("auto", "fused", "interpret", "padded")
+
+    def __init__(self, dtype: str = "float32",
+                 kernel_backend: str = "auto"):
         import jax  # deferred: importing repro.core must not require jax init
 
         from . import jaxexec
@@ -178,6 +183,16 @@ class JaxBackend(NumpyBackend):
         self._jnp = jax.numpy
         if dtype not in ("float32", "float64"):
             raise ValueError(f"unsupported jax backend dtype {dtype!r}")
+        if kernel_backend not in self.KERNEL_BACKENDS:
+            raise ValueError(
+                f"unsupported kernel_backend {kernel_backend!r} — pick one "
+                f"of {self.KERNEL_BACKENDS}")
+        # "auto"/"fused": ragged stages with a fused-able lambda run the
+        # ragged-native stage_fused kernel family (Pallas on TPU, jnp CSR
+        # fallback elsewhere); "interpret" additionally forces the Pallas
+        # kernels through interpret mode (CPU conformance pin); "padded"
+        # keeps the legacy (n, max_arity, w) padded-gather path
+        self.kernel_backend = kernel_backend
         if dtype == "float64" and not jax.config.jax_enable_x64:
             raise ValueError(
                 "dtype='float64' needs x64: set JAX_ENABLE_X64=1 or "
@@ -311,6 +326,23 @@ class JaxBackend(NumpyBackend):
             seg = order = w_idx
         merge_name = merge.name if combine else "add"
 
+        # ragged batches with a fused-able lambda skip the padded gather
+        # entirely: the stage_fused kernel family walks the CSR pair list
+        # (no max_arity padding, no materialized intermediates). Flat
+        # (arity ≤ 1) batches have no padding tax — they keep the flat path.
+        if (getattr(f, "fused_spec", None) is not None
+                and tasks.max_arity > 1 and self.kernel_backend != "padded"):
+            try:
+                return self._execute_fused(
+                    tasks, store, f.fused_spec, merge, merge_name, combine,
+                    want_update, want_result, w_rows)
+            except Exception:
+                # untraceable finish epilogue: same permanent per-lambda
+                # fallback as the padded path below
+                self._host_lambdas.add(id(f))
+                self._flush_if_deferred(store)
+                return execution.execute(tasks, store, f)
+
         # plan scope: pad the batch to a bucketed static shape so rounds
         # with drifting sizes share compiled executables. Padding rows read
         # nothing, write nothing (never in w_idx), and are sliced off below
@@ -380,6 +412,67 @@ class JaxBackend(NumpyBackend):
             # the engines only ever hand `update` back to apply_writes, and
             # the combine already happened on device — carry a zero-copy
             # shape-only placeholder instead of transferring n·w floats
+            placeholder = np.broadcast_to(
+                np.zeros((), dtype=self._np_dtype), (n, combined.shape[1]))
+            host["update"] = placeholder
+            self._stash = (id(tasks), id(placeholder), placeholder, uniq,
+                           combined, merge.name, dv)
+        return host
+
+    def _execute_fused(self, tasks, store, spec, merge, merge_name: str,
+                       combine: bool, want_update: bool, want_result: bool,
+                       w_rows) -> Dict[str, Optional[np.ndarray]]:
+        """Ragged-native stage via `jaxexec.run_stage_fused`. The CSR arrays
+        are bucket-padded host-side (pad *pairs* attach to pad *tasks*, so
+        real rows never see them, and per-shape jit caches stay O(log)) and
+        the writer combine rides per-task segment ids — same stash/
+        placeholder tail as the padded path, so `apply_writes` is shared."""
+        read_op, finish = spec
+        n, nnz = tasks.n, tasks.nnz
+        uniq = None
+        if combine:
+            uniq, seg_w = np.unique(tasks.write_keys[w_rows],
+                                    return_inverse=True)
+            S = _bucket_rows(w_rows.size)
+        else:
+            S = 1
+        n_pad = _bucket_rows(n + 1)  # ≥ 1 pad task to absorb pad pairs
+        nnz_pad = _bucket_rows(nnz)
+        indptr_p = np.full(n_pad + 1, nnz, dtype=np.int64)
+        indptr_p[:n + 1] = tasks.read_indptr
+        indptr_p[n_pad] = nnz_pad  # the last pad task owns every pad pair
+        indices_p = np.zeros(nnz_pad, dtype=np.int64)
+        indices_p[:nnz] = tasks.read_indices
+        pt_p = np.full(nnz_pad, n_pad - 1, dtype=np.int64)
+        pt_p[:nnz] = tasks.pair_task
+        seg_t = np.full(n_pad, S, dtype=np.int32)  # S = writes nothing
+        order_t = np.zeros(n_pad, dtype=np.int32)
+        if combine:
+            seg_t[w_rows] = seg_w
+            order_t[:n] = tasks.priority  # int32-safe per eligibility check
+        dv = self._device_values(store)
+        ctx_np = np.asarray(tasks.contexts).astype(self._np_dtype,
+                                                   copy=False)
+        ctx_pad = np.zeros((n_pad,) + ctx_np.shape[1:], dtype=self._np_dtype)
+        ctx_pad[:n] = ctx_np
+        tasks.__dict__.pop("_device_ctx", None)  # padded: restage from host
+        out = self._jx.run_stage_fused(
+            dv, indptr_p, indices_p, pt_p, self._jnp.asarray(ctx_pad),
+            seg_t, order_t, num_segments=S, read_op=read_op, finish=finish,
+            merge_name=merge_name, combine=combine, want_update=want_update,
+            want_result=want_result,
+            kernel_backend=("interpret" if self.kernel_backend == "interpret"
+                            else "auto"))
+        host: Dict[str, Optional[np.ndarray]] = {"result": None,
+                                                 "update": None}
+        if out["result"] is not None:
+            host["result"] = np.asarray(out["result"][:n])
+            self.host_syncs += 1
+        if out["update"] is not None:
+            host["update"] = np.asarray(out["update"][:n])
+            self.host_syncs += 1
+        combined = out["combined"]
+        if combine and combined is not None:
             placeholder = np.broadcast_to(
                 np.zeros((), dtype=self._np_dtype), (n, combined.shape[1]))
             host["update"] = placeholder
@@ -461,7 +554,10 @@ class JaxBackend(NumpyBackend):
             return super().key_counts(keys, num_keys, weights)
         w = None if weights is None else self._di(np.asarray(weights))
         counts = np.asarray(self._jx.contention_counts(
-            self._di(keys), int(num_keys), weights=w))
+            self._di(keys), int(num_keys), weights=w,
+            kernel_backend=("interpret"
+                            if self.kernel_backend == "interpret"
+                            else "auto")))
         uk = np.flatnonzero(counts)
         return uk.astype(np.int64), counts[uk].astype(np.int64)
 
@@ -527,8 +623,13 @@ class SpmdBackend(JaxBackend):
 
     name = "jax_spmd"
 
-    def __init__(self, dtype: str = "float32"):
-        super().__init__(dtype=dtype)
+    def __init__(self, dtype: str = "float32",
+                 kernel_backend: str = "auto"):
+        # kernel_backend reaches the Phase-1 histogram dispatch; the sharded
+        # Phase-3/4 stage program traces fused-able lambdas through their
+        # generic padded realization (per-shard pair lists are not
+        # host-visible), so stage_fused routing stays a single-device win
+        super().__init__(dtype=dtype, kernel_backend=kernel_backend)
         from . import shardexec
 
         self._sx = shardexec
@@ -616,22 +717,36 @@ class SpmdBackend(JaxBackend):
                                    rep_arrays)
 
 
-def make_backend(spec) -> NumpyBackend:
+def make_backend(spec, *, kernel_backend: Optional[str] = None
+                 ) -> NumpyBackend:
     """Coerce a user-facing `backend=` spec into a backend instance.
 
     None/"numpy" → the shared numpy oracle; "jax" → a `JaxBackend`
     (float32); "jax_spmd" → a `SpmdBackend` (float32, one mesh shard per
     machine); an existing backend instance passes through (shared device
-    caches across sessions).
+    caches across sessions). `kernel_backend` selects how fused-able
+    lambdas reach the kernel tree ("auto"/"fused"/"interpret"/"padded",
+    see `JaxBackend`) and therefore needs a device backend.
     """
-    if spec is None:
+    if spec is None or spec == "numpy":
+        if kernel_backend is not None:
+            raise ValueError(
+                f"kernel_backend={kernel_backend!r} needs backend='jax' or "
+                "'jax_spmd' — the numpy oracle has no kernel dispatch")
         return _NUMPY
     if isinstance(spec, NumpyBackend):
+        if kernel_backend is not None \
+                and getattr(spec, "kernel_backend", None) != kernel_backend:
+            raise ValueError(
+                f"kernel_backend={kernel_backend!r} conflicts with the "
+                f"passed backend instance (kernel_backend="
+                f"{getattr(spec, 'kernel_backend', None)!r}) — construct "
+                "the instance with the kernel_backend you want")
         return spec
     if isinstance(spec, str):
-        if spec == "numpy":
-            return _NUMPY
-        return get_backend_cls(spec)()
+        cls = get_backend_cls(spec)
+        return cls() if kernel_backend is None \
+            else cls(kernel_backend=kernel_backend)
     raise TypeError(f"bad backend spec: {spec!r}")
 
 

@@ -15,9 +15,12 @@ at all); it forwards unchanged to the engine. Session-level options ride the
 same call: `backend="numpy" | "jax" | "jax_spmd"` picks the numeric
 execution backend — the float64 oracle, the jitted single-device pipeline,
 or the mesh-sharded SPMD realization with one device per machine (cost
-reports are bit-identical across all three) — and `replication=` opts
-into the adaptive hot-chunk subsystem — both forward to the underlying
-`Orchestrator`.
+reports are bit-identical across all three) — `kernel_backend=` picks how
+fused-able lambdas (`repro.core.fused_read`) reach the kernel tree on a
+device backend ("auto"/"fused" — the ragged-native `stage_fused` kernel;
+"interpret" — the same kernel interpreted on CPU; "padded" — the legacy
+padded gather) — and `replication=` opts into the adaptive hot-chunk
+subsystem — all forward to the underlying `Orchestrator`.
 
 `orchestration()` is the one-shot shim: it builds a throwaway `Orchestrator`
 session per call. Workloads that chain stages (graph rounds, kv batches)
@@ -54,10 +57,12 @@ def orchestration(
     engine: str = "tdorch",
     return_results: bool = False,
     backend=None,
+    kernel_backend=None,
     replication=None,
     **engine_opts,
 ) -> OrchestrationResult:
     sess = Orchestrator(store, engine=engine, backend=backend,
+                        kernel_backend=kernel_backend,
                         replication=replication, **engine_opts)
     return sess.run_stage(tasks, f, write_back=write_back,
                           return_results=return_results)

@@ -30,6 +30,7 @@ from jax import lax
 
 from ..kernels.histogram.ops import count_ids
 from ..kernels.segment_combine.ops import combine as _kernel_combine
+from ..kernels.stage_fused.ops import fused_stage as _fused_stage
 
 # order sentinel for rows excluded from a "write" (first-writer-wins) combine
 _ORDER_MAX = jnp.iinfo(jnp.int32).max
@@ -203,6 +204,32 @@ def run_stage_ragged(values, read_indices, row, col, mask, contexts, w_idx,
     return _finish_stage(out, gathered.reshape(n, A * w), w_idx, seg, order,
                          merge_name=merge_name, combine=combine,
                          want_update=want_update, want_result=want_result)
+
+
+def run_stage_fused(values, indptr, indices, pair_task, contexts, seg,
+                    order, *, num_segments: int, read_op: str, finish,
+                    merge_name: str, combine: bool, want_update: bool,
+                    want_result: bool = True, kernel_backend: str = "auto"):
+    """Ragged-native stage numerics for a fused-able lambda
+    (`core/fusedlam.FusedStageLambda`): gather → `read_op` reduction →
+    `finish` → writer ⊗-combine straight off the CSR pair list, one
+    `kernels.stage_fused` dispatch (Pallas on TPU, jnp fallback elsewhere,
+    `"interpret"` for the device-free conformance pin) — no
+    `(n, max_arity, w)` padding, no materialized intermediates. The CSR
+    geometry arrays are *host* arrays here (the kernel's tiling is computed
+    from them); `seg` is per-task with `num_segments` meaning "writes
+    nothing". Same output contract as `run_stage_flat`/`run_stage_ragged`.
+    """
+    upd, combined = _fused_stage(
+        values, indptr, indices, pair_task, contexts, seg, order,
+        num_segments=num_segments, read_op=read_op, finish=finish,
+        merge_name=merge_name, combine=combine, backend=kernel_backend)
+    upd = upd.astype(values.dtype)
+    if combined is not None:
+        combined = combined.astype(values.dtype)
+    return {"result": upd if want_result else None,
+            "update": upd if want_update else None,
+            "combined": combined}
 
 
 # donate the store buffer into the ⊙-apply where the platform supports

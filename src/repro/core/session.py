@@ -42,6 +42,14 @@ class Orchestrator:
     accepts a backend instance to share device caches across sessions.
     Cost reports are bit-identical across backends.
 
+    `kernel_backend=` (device backends only) selects how fused-able stage
+    lambdas (`fused_read` / `FusedStageLambda`) reach the kernel tree:
+    "auto"/"fused" — ragged stages run the ragged-native
+    `kernels/stage_fused` kernel (Pallas on TPU, jnp CSR fallback
+    elsewhere); "interpret" — the same Pallas kernels interpreted on CPU
+    (the conformance pin); "padded" — the legacy `(n, max_arity, w)`
+    padded-gather path.
+
     `replication=` turns on the session-owned hot-chunk subsystem
     (`core.replication`): pass True for defaults, a dict / `ReplicationConfig`
     for knobs, or an existing `HotChunkReplicator` to share state. The
@@ -53,15 +61,17 @@ class Orchestrator:
     """
 
     def __init__(self, store: DataStore, engine: str = "tdorch", *,
-                 backend=None, replication=None, **engine_opts):
+                 backend=None, kernel_backend=None, replication=None,
+                 **engine_opts):
         self.store = store
         self.engine_name = engine if isinstance(engine, str) else type(engine).__name__
         if isinstance(engine, str):
-            self.engine = make_engine(engine, store.P,
-                                      backend=make_backend(backend),
-                                      **engine_opts)
+            self.engine = make_engine(
+                engine, store.P,
+                backend=make_backend(backend, kernel_backend=kernel_backend),
+                **engine_opts)
         else:
-            if backend is not None:
+            if backend is not None or kernel_backend is not None:
                 raise ValueError(
                     "pass backend= to the engine's constructor when handing "
                     "Orchestrator an engine instance — a session cannot "

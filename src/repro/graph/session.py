@@ -114,12 +114,16 @@ class GraphSession:
     jitted scatter of `repro.core.backend`, or "jax_spmd", which accepts
     graph rounds too and validates the device mesh against P at
     construction); cost reports are bit-identical either way.
+    `kernel_backend=` forwards to the device backend's kernel dispatch
+    ("auto"/"fused"/"interpret"/"padded" — see `repro.core.JaxBackend`),
+    reaching any fused-able lambdas driven through this session.
     """
 
     og: "OrchestratedGraph"  # noqa: F821 — forward ref, avoids import cycle
     defaults: dict = dataclasses.field(default_factory=dict)
     replication: object = None  # None | True | dict | ReplicationConfig
     backend: object = None  # None/"numpy" oracle | "jax" jitted | instance
+    kernel_backend: object = None  # fused-kernel dispatch (device backends)
 
     def __post_init__(self):
         og = self.og
@@ -127,7 +131,8 @@ class GraphSession:
                                        og.src_grp_machines, og.C)
         self.replicator = make_replicator(self.replication, og.vertex_home,
                                           og.P, VALUE_WORDS)
-        self.backend = make_backend(self.backend)
+        self.backend = make_backend(self.backend,
+                                    kernel_backend=self.kernel_backend)
         check = getattr(self.backend, "validate_machines", None)
         if check is not None:
             check(og.P)

@@ -1,0 +1,1 @@
+from .ops import FUSED_READ_OPS, fused_stage  # noqa: F401

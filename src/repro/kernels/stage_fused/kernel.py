@@ -1,0 +1,256 @@
+"""Ragged-native fused stage kernel (TD-Orch Phases 3+4), Pallas TPU.
+
+One kernel walks the CSR (`read_indptr`/`read_indices`) pair list directly
+— gather, per-task `read_op` reduction, `finish` epilogue, and
+writer-segment ⊗-combine — with no `max_arity` padding and no intermediate
+HBM round-trips. flash_attention-style tiling: the grid is
+(task tiles × pair blocks) with the pair dim innermost sequential; each
+task tile streams its own pair range through VMEM in `block_p`-sized
+dynamic slices (per-tile bounds ride scalar prefetch, the moe_gemm idiom),
+reducing into a VMEM accumulator. Gathers are onehot-matmuls against the
+VMEM-resident value table (the histogram idiom — no scatter/gather
+primitives), so a skewed batch pays for its *actual* pairs, not
+`n × max_arity`.
+
+The ⊗-combine accumulates across tiles in a VMEM scratch: ``add`` as a
+(seg-onehot)ᵀ·updates MXU matmul; ``min``/``max``/``or`` as per-row
+dynamic-slice reductions; ``write`` (Definition 2 case iv) keeps the
+lowest-order / lowest-row winner per segment via a strict-compare scratch
+of winning orders — tiles visit tasks in ascending row order, so a strict
+`<` reproduces the oracle's tie-break exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# finite fill that survives float32 (the merge identities in core/mergeops.py
+# are float64 ±FMAX, which overflow f32)
+_BIG = float(np.finfo(np.float32).max) / 2
+_ORDER_MAX = np.iinfo(np.int32).max
+
+# combine-scratch init per merge op — matching the jnp fallback
+# (`segment_combine.ops.combine`) on every *hit* segment; un-hit segments
+# hold these identities (garbage the caller slices or drops by key)
+_COMB_INIT = {"add": 0.0, "or": 0.0, "write": 0.0,
+              "min": float(np.finfo(np.float32).max),
+              "max": -float(np.finfo(np.float32).max)}
+
+
+def _rup(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _fused_kernel(bounds_ref, segp_ref, ordp_ref, starts_ref, arity_ref,
+                  ctx_ref, values_ref, indices_ref, pair_task_ref,
+                  upd_ref, comb_ref, red_ref, acc_ref, word_ref, *,
+                  read_op: str, finish, merge_name: str, combine: bool,
+                  num_segments: int, w: int, c: int, w_out: int,
+                  block_t: int, block_p: int):
+    t = pl.program_id(0)
+    p = pl.program_id(1)
+    n_p = pl.num_programs(1)
+    ps = bounds_ref[t, 0]
+    pe = bounds_ref[t, 1]
+    bt, bp = block_t, block_p
+    s_pad = acc_ref.shape[0]
+
+    @pl.when((t == 0) & (p == 0))
+    def _init_combine():
+        acc_ref[...] = jnp.full_like(acc_ref, _COMB_INIT[merge_name])
+        word_ref[...] = jnp.full_like(word_ref, _ORDER_MAX)
+
+    @pl.when(p == 0)
+    def _init_reduce():
+        fill = {"add": 0.0, "first": 0.0, "min": _BIG,
+                "max": -_BIG}[read_op]
+        red_ref[...] = jnp.full_like(red_ref, fill)
+
+    start = ps + p * bp
+
+    @pl.when(start < pe)
+    def _reduce_block():
+        idx = indices_ref[pl.ds(start, bp)]  # (bp,) requested chunk keys
+        ptask = pair_task_ref[pl.ds(start, bp)]  # (bp,) owning task rows
+        gpos = start + jax.lax.broadcasted_iota(jnp.int32, (bp, 1), 0)[:, 0]
+        live = gpos < pe
+        # gather the block's pair values: onehot (bp, K) @ values (K, w)
+        kcols = jax.lax.broadcasted_iota(jnp.int32, idx.shape + (
+            values_ref.shape[0],), 1)
+        oh = ((idx[:, None] == kcols) & live[:, None]).astype(jnp.float32)
+        g = jax.lax.dot(oh, values_ref[...].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)  # (bp, w_pad)
+        # local task membership: (bt, bp) onehot of this tile's rows
+        loc = ptask - t * bt
+        trows = jax.lax.broadcasted_iota(jnp.int32, (bt, bp), 0)
+        toh = (loc[None, :] == trows) & live[None, :]
+        if read_op == "add":
+            red_ref[...] += jax.lax.dot(toh.astype(jnp.float32), g,
+                                        preferred_element_type=jnp.float32)
+        elif read_op == "first":
+            first = toh & (gpos[None, :] == starts_ref[...][:, None])
+            red_ref[...] += jax.lax.dot(first.astype(jnp.float32), g,
+                                        preferred_element_type=jnp.float32)
+        else:
+            fill = jnp.asarray(_BIG if read_op == "min" else -_BIG,
+                               jnp.float32)
+            m = jnp.where(toh[:, :, None], g[None, :, :], fill)
+            if read_op == "min":
+                red_ref[...] = jnp.minimum(red_ref[...], m.min(axis=1))
+            else:
+                red_ref[...] = jnp.maximum(red_ref[...], m.max(axis=1))
+
+    @pl.when(p == n_p - 1)
+    def _finalize_tile():
+        red = red_ref[...]
+        if read_op in ("min", "max"):
+            # arity-0 rows reduce to 0 (the oracle's zero-filled gather)
+            red = jnp.where((arity_ref[...] > 0)[:, None], red,
+                            jnp.zeros((), jnp.float32))
+        if finish is None:
+            fin = red[:, :w_out]
+        else:
+            fin = finish(ctx_ref[...][:, :c],
+                         red[:, :w]).astype(jnp.float32)
+        pad_w = upd_ref.shape[1] - w_out
+        if pad_w:
+            fin = jnp.concatenate(
+                [fin, jnp.zeros((bt, pad_w), jnp.float32)], axis=1)
+        upd_ref[...] = fin
+        if not combine:
+            return
+        base = t * bt
+        if merge_name == "add":
+            # (bt, s_pad) seg onehot from SMEM scalars; sᵀ·fin on the MXU
+            scols = jax.lax.broadcasted_iota(jnp.int32, (1, s_pad), 1)
+            soh = jnp.concatenate(
+                [(scols == segp_ref[base + i]).astype(jnp.float32)
+                 for i in range(bt)], axis=0)
+            acc_ref[...] += jax.lax.dot_general(
+                soh, fin, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        else:
+            for i in range(bt):  # ascending rows — order ties break low
+                si = segp_ref[base + i]
+                alive = si < num_segments
+                sc = jnp.clip(si, 0, s_pad - 1)
+                cur = acc_ref[pl.ds(sc, 1), :]
+                row = fin[i:i + 1, :]
+                if merge_name == "min":
+                    acc_ref[pl.ds(sc, 1), :] = jnp.where(
+                        alive, jnp.minimum(cur, row), cur)
+                elif merge_name in ("max", "or"):
+                    acc_ref[pl.ds(sc, 1), :] = jnp.where(
+                        alive, jnp.maximum(cur, row), cur)
+                else:  # "write": strictly-lower order wins
+                    oi = ordp_ref[base + i]
+                    cur_ord = word_ref[pl.ds(sc, 1)]
+                    take = alive & (oi < cur_ord[0])
+                    word_ref[pl.ds(sc, 1)] = jnp.where(take, oi, cur_ord)
+                    acc_ref[pl.ds(sc, 1), :] = jnp.where(take, row, cur)
+
+    @pl.when((t == pl.num_programs(0) - 1) & (p == n_p - 1))
+    def _emit_combined():
+        comb_ref[...] = acc_ref[...]
+
+
+def fused_stage_pallas(values, indptr, indices, pair_task, contexts, seg,
+                       order, *, num_segments: int, read_op: str,
+                       finish=None, merge_name: str = "add",
+                       combine: bool = True, w_out: int | None = None,
+                       block_t: int = 8, block_p: int = 128,
+                       interpret: bool = False):
+    """Host wrapper: numpy CSR geometry in, `(updates (n, w_out),
+    combined (num_segments, w_out))` out. `indptr`/`indices`/`pair_task`/
+    `seg`/`order` must be host arrays (the tiling is computed from them);
+    `values`/`contexts` may live on device. Pad pairs are created here and
+    attach to pad tasks only — real rows never see them."""
+    indptr = np.asarray(indptr, dtype=np.int64)
+    n = indptr.shape[0] - 1
+    nnz = int(indptr[-1])
+    K, w = values.shape
+    c = int(contexts.shape[1]) if contexts.ndim > 1 else 0
+    if w_out is None:
+        w_out = w if finish is None else int(jax.eval_shape(
+            finish, jax.ShapeDtypeStruct((block_t, c), jnp.float32),
+            jax.ShapeDtypeStruct((block_t, w), jnp.float32)).shape[1])
+
+    # --- host-side tiling geometry (all numpy; pad tasks absorb nothing:
+    # their indptr slice is empty, so pad pairs are never live) ------------
+    n_pad = _rup(n + 1, block_t)  # ≥ 1 pad task, always
+    nt = n_pad // block_t
+    starts = np.concatenate([indptr[:-1], np.full(n_pad - n, nnz)])
+    arity = np.concatenate([np.diff(indptr),
+                            np.zeros(n_pad - n, dtype=np.int64)])
+    bounds = np.zeros((nt, 2), dtype=np.int32)
+    edges = np.concatenate([indptr, np.full(n_pad - n, nnz)])
+    bounds[:, 0] = edges[0:n_pad:block_t]
+    bounds[:, 1] = edges[block_t:n_pad + 1:block_t]
+    np_blocks = int(np.ceil(
+        (bounds[:, 1] - bounds[:, 0]).max(initial=0) / block_p)) or 1
+    nnz_pad = _rup(nnz, block_p) + block_p  # dynamic-slice headroom
+    idx_pad = np.zeros(nnz_pad, dtype=np.int32)
+    idx_pad[:nnz] = indices
+    pt_pad = np.full(nnz_pad, n_pad - 1, dtype=np.int32)
+    pt_pad[:nnz] = pair_task
+    seg_pad = np.full(n_pad, num_segments, dtype=np.int32)
+    seg_pad[:n] = seg
+    ord_pad = np.full(n_pad, _ORDER_MAX, dtype=np.int32)
+    ord_pad[:n] = order
+
+    k_pad = _rup(max(K, 1), 128)  # lane dim of the gather onehot
+    w_pad = _rup(max(w, 1), 128)
+    c_pad = _rup(max(c, 1), 128)
+    wo_pad = _rup(max(w_out, 1), 128)
+    s_pad = _rup(max(num_segments, 1), 128)  # lane dim of the seg onehot
+    vals_p = jnp.zeros((k_pad, w_pad), jnp.float32).at[:K, :w].set(
+        jnp.asarray(values, jnp.float32))
+    ctx_p = jnp.zeros((n_pad, c_pad), jnp.float32)
+    if c:
+        ctx_p = ctx_p.at[:n, :c].set(jnp.asarray(contexts, jnp.float32))
+
+    grid = (nt, np_blocks)
+    kern = functools.partial(
+        _fused_kernel, read_op=read_op, finish=finish,
+        merge_name=merge_name, combine=combine, num_segments=num_segments,
+        w=w, c=c, w_out=w_out, block_t=block_t, block_p=block_p)
+    upd, comb = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,  # bounds, seg, order ride SMEM
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_t,), lambda t, p, b, s, o: (t,)),
+                pl.BlockSpec((block_t,), lambda t, p, b, s, o: (t,)),
+                pl.BlockSpec((block_t, c_pad), lambda t, p, b, s, o: (t, 0)),
+                pl.BlockSpec((k_pad, w_pad), lambda t, p, b, s, o: (0, 0)),
+                pl.BlockSpec((nnz_pad,), lambda t, p, b, s, o: (0,)),
+                pl.BlockSpec((nnz_pad,), lambda t, p, b, s, o: (0,)),
+            ],
+            out_specs=[
+                pl.BlockSpec((block_t, wo_pad), lambda t, p, b, s, o: (t, 0)),
+                pl.BlockSpec((s_pad, wo_pad), lambda t, p, b, s, o: (0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((block_t, w_pad), jnp.float32),
+                pltpu.VMEM((s_pad, wo_pad), jnp.float32),
+                pltpu.VMEM((s_pad,), jnp.int32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, wo_pad), jnp.float32),
+            jax.ShapeDtypeStruct((s_pad, wo_pad), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(bounds), jnp.asarray(seg_pad), jnp.asarray(ord_pad),
+      jnp.asarray(starts, jnp.int32), jnp.asarray(arity, jnp.int32),
+      ctx_p, vals_p, jnp.asarray(idx_pad), jnp.asarray(pt_pad))
+    return upd[:n, :w_out], (comb[:num_segments, :w_out] if combine
+                             else None)

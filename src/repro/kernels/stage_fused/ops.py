@@ -1,0 +1,94 @@
+"""Public ragged fused-stage op with backend selection.
+
+One call runs TD-Orch Phases 3+4 for a *fused-able* stage lambda — a
+declared per-pair reduction (``read_op``) plus an optional elementwise
+``finish`` epilogue (see `core/fusedlam.py`) — straight off the CSR pair
+list: gather → reduce → finish → writer-segment ⊗-combine, no
+`(n, max_arity, w)` padding anywhere.
+
+Backends mirror the other kernel families: ``"pallas"`` is the fused TPU
+kernel (`kernel.py`), ``"interpret"`` the same kernel interpreted on CPU
+(the conformance suite's device-free pin), ``"ref"`` the jitted jnp
+fallback (`ref.py`) used automatically off-TPU — and on TPU whenever the
+value table or segment count would blow the kernel's VMEM budget.
+
+Unlike the dense families this op is *not* top-level jitted: the tiling
+geometry is computed host-side from the concrete CSR arrays (which callers
+should bucket-pad — `core/backend.py` does — so the per-shape jit caches
+underneath stay small).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import fused_stage_pallas
+from .ref import fused_stage_ref
+
+FUSED_READ_OPS = ("add", "min", "max", "first")
+FUSED_MERGES = ("add", "min", "max", "or", "write")
+
+# VMEM-budget bounds for the fused kernel: the whole value table and the
+# combine accumulator are VMEM-resident (≈ K·w·4 + S·w_out·4 bytes plus the
+# (block_p, K) gather onehot) — beyond these the jnp fallback wins anyway
+_MAX_KEYS = 1 << 13
+_MAX_WIDTH = 512
+_MAX_SEGMENTS = 1 << 13
+_MAX_NNZ = 1 << 21
+
+
+def fits_pallas(num_keys: int, width: int, num_segments: int,
+                nnz: int) -> bool:
+    return (num_keys <= _MAX_KEYS and width <= _MAX_WIDTH
+            and num_segments <= _MAX_SEGMENTS and nnz <= _MAX_NNZ)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_segments", "read_op", "finish", "merge_name", "combine"))
+def _ref_jit(values, indptr, indices, pair_task, contexts, seg, order, *,
+             num_segments, read_op, finish, merge_name, combine):
+    return fused_stage_ref(values, indptr, indices, pair_task, contexts,
+                           seg, order, num_segments=num_segments,
+                           read_op=read_op, finish=finish,
+                           merge_name=merge_name, combine=combine)
+
+
+def fused_stage(values, indptr, indices, pair_task, contexts, seg, order, *,
+                num_segments: int, read_op: str, finish=None,
+                merge_name: str = "add", combine: bool = True,
+                backend: str = "auto", block_t: int = 8,
+                block_p: int = 128):
+    """Fused ragged stage: ``(updates (n, w_out), combined
+    (num_segments, w_out))`` (combined None when ``combine`` is False).
+
+    `indptr`/`indices`/`pair_task`/`seg`/`order` are host arrays (the
+    Pallas tiling is computed from them); `values`/`contexts` may be
+    device-resident. A task whose ``seg == num_segments`` is dropped from
+    the combine; rows of un-hit segments hold the merge identity.
+    """
+    if read_op not in FUSED_READ_OPS:
+        raise KeyError(f"fused read op {read_op!r} not in {FUSED_READ_OPS}")
+    if combine and merge_name not in FUSED_MERGES:
+        raise KeyError(f"merge op {merge_name!r} has no fused combine")
+    if backend == "auto":
+        backend = "pallas" if (
+            jax.default_backend() == "tpu"
+            and fits_pallas(values.shape[0], values.shape[1],
+                            num_segments, int(np.asarray(indptr)[-1]))
+        ) else "ref"
+    if backend == "ref":
+        return _ref_jit(jnp.asarray(values), jnp.asarray(indptr),
+                        jnp.asarray(indices), jnp.asarray(pair_task),
+                        jnp.asarray(contexts), jnp.asarray(seg),
+                        jnp.asarray(order), num_segments=num_segments,
+                        read_op=read_op, finish=finish,
+                        merge_name=merge_name, combine=combine)
+    return fused_stage_pallas(values, indptr, indices, pair_task, contexts,
+                              seg, order, num_segments=num_segments,
+                              read_op=read_op, finish=finish,
+                              merge_name=merge_name, combine=combine,
+                              block_t=block_t, block_p=block_p,
+                              interpret=(backend == "interpret"))

@@ -1,0 +1,86 @@
+"""jnp reference for the ragged fused stage — also the off-TPU fallback.
+
+Same CSR-native contract as the Pallas kernel (`kernel.py`): walk the
+(task, key) pair list directly — per-pair gather, per-task `read_op`
+reduction, optional `finish` epilogue, writer-segment ⊗-combine — with no
+`(n, max_arity, w)` padding anywhere. Realized as jnp segment scatters
+(`mode="drop"`), so it jits on any platform; the interpret-mode suite
+(`tests/test_stage_fused.py`) pins the Pallas kernel to this module.
+
+Padding contract (shared with the kernel): callers may pad the batch — pad
+*pairs* must attach to pad *tasks* (rows ≥ the real task count), and a
+task with ``seg >= num_segments`` is dropped from the combine. Pad rows of
+the per-task output are garbage the caller slices off.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..segment_combine.ops import combine as _combine
+
+# a finite fill that survives float32 (np.finfo(f64).max would overflow)
+_BIG = float(jnp.finfo(jnp.float32).max) / 2
+# order sentinel for rows excluded from a "write" combine
+_ORDER_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _reduce_pairs(values, indptr, indices, pair_task, *, read_op: str):
+    """(n, w) per-task reduction of the gathered pair values, CSR-native.
+    Arity-0 tasks reduce to 0 for every op — matching the zero-filled
+    padded gather the oracle hands generic lambdas."""
+    n = indptr.shape[0] - 1
+    w = values.shape[1]
+    nnz = indices.shape[0]
+    arity = jnp.diff(indptr)
+    if read_op == "first":
+        if nnz == 0:
+            return jnp.zeros((n, w), values.dtype)
+        fidx = indices[jnp.clip(indptr[:-1], 0, nnz - 1)]
+        return jnp.where((arity > 0)[:, None], values[fidx],
+                         jnp.zeros((), values.dtype))
+    pv = values[jnp.clip(indices, 0, max(values.shape[0] - 1, 0))]
+    if read_op == "add":
+        return jnp.zeros((n, w), values.dtype).at[pair_task].add(
+            pv, mode="drop")
+    big = jnp.asarray(_BIG if read_op == "min" else -_BIG, values.dtype)
+    red = jnp.full((n, w), big, values.dtype)
+    red = red.at[pair_task].min(pv, mode="drop") if read_op == "min" \
+        else red.at[pair_task].max(pv, mode="drop")
+    return jnp.where((arity > 0)[:, None], red, jnp.zeros((), values.dtype))
+
+
+def _combine_write(upd, seg, order, num_segments: int):
+    """Definition 2 case (iv): lowest `order` in the segment wins, ties
+    broken by row position — two 1-D scatter-mins plus a gather."""
+    n = upd.shape[0]
+    segc = jnp.clip(seg, 0, max(num_segments - 1, 0))
+    live = seg < num_segments
+    win_ord = jnp.full(num_segments, _ORDER_MAX, order.dtype).at[seg].min(
+        order, mode="drop")
+    tied = live & (order == win_ord[segc])
+    rows = jnp.arange(n, dtype=jnp.int32)
+    win_row = jnp.full(num_segments, n, jnp.int32).at[
+        jnp.where(tied, seg, num_segments)].min(rows, mode="drop")
+    return upd[jnp.clip(win_row, 0, max(n - 1, 0))]
+
+
+def fused_stage_ref(values, indptr, indices, pair_task, contexts, seg,
+                    order, *, num_segments: int, read_op: str, finish=None,
+                    merge_name: str = "add", combine: bool = True):
+    """Returns ``(updates (n, w_out), combined (num_segments, w_out))``
+    (combined is None when ``combine`` is False). All-jnp, jit-safe with
+    static `read_op`/`finish`/`merge_name`/`num_segments`/`combine`."""
+    # asarray first: a float64 numpy input silently takes the device dtype
+    # here instead of warning at every creation call downstream
+    red = _reduce_pairs(jnp.asarray(values), jnp.asarray(indptr),
+                        jnp.asarray(indices), jnp.asarray(pair_task),
+                        read_op=read_op)
+    upd = red if finish is None else finish(contexts, red)
+    if not combine:
+        return upd, None
+    seg = jnp.asarray(seg)
+    if merge_name == "write":
+        combined = _combine_write(upd, seg, jnp.asarray(order), num_segments)
+    else:
+        combined = _combine(upd, seg, num_segments, op=merge_name)
+    return upd, combined

@@ -325,8 +325,9 @@ class DistributedHashTable:
                               refcount=res.refcount)
 
     # ---- streaming serving mode (repro.serve) ------------------------------
-    def serve(self, *, engine: str = "tdorch", backend=None, replicate=None,
-              config=None, mode: str = "thread", double_buffer: bool = True,
+    def serve(self, *, engine: str = "tdorch", backend=None,
+              kernel_backend=None, replicate=None, config=None,
+              mode: str = "thread", double_buffer: bool = True,
               **kw) -> "KVFrontend":
         """The table's streaming front door: a `repro.serve.Frontend` over a
         pinned session pair, admitting GET / read-modify-write / MULTI-GET
@@ -335,14 +336,18 @@ class DistributedHashTable:
         are bit-identical to the one-shot path for the same request
         sequence.
 
-        `engine=`/`backend=`/`replicate=` select the session exactly as
-        `session()` does (the frontend forks it for the second buffer);
+        `engine=`/`backend=`/`kernel_backend=`/`replicate=` select the
+        session exactly as `session()` does (the frontend forks it for the
+        second buffer);
         `config` takes `repro.serve.BatchingConfig` knobs (or a dict);
         `mode="sync"` runs the pipeline inline and deterministic, `"thread"`
         (default) runs the double-buffered router/executor pair. Close the
         frontend (or use it as a context manager) when done.
         """
-        sess = self.session(engine, replicate=replicate, backend=backend)
+        opts = {} if kernel_backend is None \
+            else {"kernel_backend": kernel_backend}
+        sess = self.session(engine, replicate=replicate, backend=backend,
+                            **opts)
         return KVFrontend(self, sess, config=config, mode=mode,
                           double_buffer=double_buffer, **kw)
 

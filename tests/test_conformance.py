@@ -1,7 +1,9 @@
 """Property-based differential conformance suite.
 
-Random ragged `TaskBatch`es, merge ops, replication configs and StagePlan
-emission patterns are executed across every engine x {numpy, jax, jax_spmd}
+Random ragged `TaskBatch`es (including high-arity >=32 and empty-row
+geometries), merge ops, fused-able stage lambdas, replication configs and
+StagePlan emission patterns are executed across every engine x {numpy, jax,
+jax_spmd} x kernel_backend {auto, fused, interpret}
 and asserted value- and cost-equivalent to the numpy oracle: store values and
 per-task results within float tolerance, per-phase words/rounds/work
 bit-identical (`assert_cost_parity`). Cases are plain python dicts, so when
@@ -24,8 +26,9 @@ import jax
 
 from repro.core import (CostAccumulator, DataStore, Orchestrator, TaskBatch,
                         assert_cost_parity, assert_session_parity,
-                        make_backend)
+                        fused_read, make_backend)
 from repro.core.cost import SessionReport
+from repro.core.fusedlam import FUSED_READ_OPS
 
 from _hyp import HAVE_HYPOTHESIS, given, settings, st
 
@@ -34,8 +37,15 @@ ENGINES = ["tdorch", "pull", "push", "sort"]
 MERGES = ["add", "min", "max", "or", "write"]
 RTOL, ATOL = 2e-4, 1e-5
 
-# shared backend instances: compiled programs stay warm across cases
-BACKENDS = {"jax": make_backend("jax"), "jax_spmd": make_backend("jax_spmd")}
+# shared backend instances: compiled programs stay warm across cases.
+# kernel_backend is a matrix axis: "jax" dispatches fused-able lambdas via
+# "auto" (jnp CSR ref on CPU), "jax_fused" forces the fused route, and
+# "jax_interpret" runs the actual Pallas stage kernel in interpret mode —
+# pinning kernel/ref/oracle differentially on every box.
+BACKENDS = {"jax": make_backend("jax"), "jax_spmd": make_backend("jax_spmd"),
+            "jax_fused": make_backend("jax", kernel_backend="fused"),
+            "jax_interpret": make_backend("jax", kernel_backend="interpret")}
+KERNEL_BACKENDS = ["jax_fused", "jax_interpret"]
 
 
 def _mk_lambda(w):
@@ -49,6 +59,21 @@ def _mk_lambda(w):
 
 # one function object per store width: jitted backends cache per lambda id
 _LAMBDAS = {w: _mk_lambda(w) for w in (1, 2, 3)}
+
+
+def _finish_muladd(c, r):
+    return r * c[:, :1] + c[:, 1:2]
+
+
+def _lambda_for(case):
+    """The case's stage lambda: a fused-able `FusedStageLambda` when the
+    case carries a read_op (module-level finish keeps jit caches warm —
+    `fused_read` caches on (read_op, id(finish))), else the generic padded
+    lambda. On the numpy oracle the fused lambda runs its padded-view
+    reduction; on device backends the kernel tree takes over — the point of
+    the differential axis."""
+    ro = case.get("read_op")
+    return fused_read(ro, _finish_muladd) if ro else _LAMBDAS[case["w"]]
 
 
 # ---------------------------------------------------------------------------
@@ -77,7 +102,7 @@ def _run_session(case, engine, backend, P):
            if case["replicated"] else None)
     sess = Orchestrator(store, engine=engine, backend=backend,
                         replication=rep)
-    f = _LAMBDAS[case["w"]]
+    f = _lambda_for(case)
     results = [sess.run_stage(_build_batch(case, P), f,
                               write_back=case["merge"], return_results=True)
                for _ in range(case["stages"])]
@@ -127,20 +152,29 @@ def _check_with_repro(case, engine, backend_name):
 
 
 def _random_case(rng) -> dict:
-    n = int(rng.integers(1, 16))
+    hi = rng.random() < 0.3  # high-arity ragged regime (a >=32-read task)
+    n = int(rng.integers(1, 6 if hi else 16))
     K = int(rng.choice([12, 24]))
+    key_lists = [rng.integers(0, K, rng.integers(0, 4)).tolist()
+                 for _ in range(n)]
+    if hi:
+        # one fat row among thin ones: the worst case for max_arity padding
+        key_lists[0] = rng.integers(0, K, int(rng.integers(32, 37))).tolist()
+    if n > 1 and rng.random() < 0.4:
+        key_lists[-1] = []  # explicit empty-row geometry
     return {
         "P": int(rng.integers(1, 5)),
         "K": K,
         "w": int(rng.choice([1, 3])),
-        "key_lists": [rng.integers(0, K, rng.integers(0, 4)).tolist()
-                      for _ in range(n)],
+        "key_lists": key_lists,
         "write_keys": rng.integers(-1, K, n).tolist(),
         "origins": rng.integers(0, 8, n).tolist(),
         "priorities": (rng.integers(0, 6, n).tolist()
                        if rng.random() < 0.5 else None),
         "merge": str(rng.choice(MERGES)),
         "replicated": bool(rng.random() < 0.5),
+        "read_op": (str(rng.choice(FUSED_READ_OPS))
+                    if rng.random() < 0.5 else None),
         "stages": 2,
         "seed": int(rng.integers(0, 2**31)),
     }
@@ -150,11 +184,18 @@ def _random_case(rng) -> dict:
 # seeded differential matrix — always runs, hypothesis or not
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("engine", ENGINES)
-@pytest.mark.parametrize("backend_name", ["jax", "jax_spmd"])
+@pytest.mark.parametrize("backend_name",
+                         ["jax", "jax_spmd"] + KERNEL_BACKENDS)
 def test_seeded_differential_matrix(engine, backend_name):
     rng = np.random.default_rng(2026)
-    for _ in range(4):
+    # interpret mode runs the real Pallas kernel on CPU — correct but slow;
+    # two cases per engine keep the wall-clock sane while still crossing
+    # read-op/merge/geometry regimes
+    ncases = 2 if backend_name == "jax_interpret" else 4
+    for _ in range(ncases):
         case = _random_case(rng)
+        if backend_name in KERNEL_BACKENDS and not case.get("read_op"):
+            case["read_op"] = "add"  # the axis is moot without a fused lambda
         _check_with_repro(case, engine, backend_name)
 
 
@@ -165,10 +206,18 @@ if HAVE_HYPOTHESIS:
     @st.composite
     def _cases(draw):
         K = draw(st.sampled_from([12, 24]))
-        n = draw(st.integers(min_value=1, max_value=14))
+        hi = draw(st.booleans())  # high-arity ragged regime
+        n = draw(st.integers(min_value=1, max_value=5 if hi else 14))
         key_lists = draw(st.lists(
             st.lists(st.integers(0, K - 1), min_size=0, max_size=3),
             min_size=n, max_size=n))
+        if hi:
+            # guarantee a genuinely high-arity (>=32 reads) task so padding
+            # blow-up and the fused CSR walk both get exercised
+            key_lists[0] = draw(st.lists(st.integers(0, K - 1),
+                                         min_size=32, max_size=36))
+        if n > 1 and draw(st.booleans()):
+            key_lists[-1] = []  # explicit empty-row geometry
         return {
             "P": draw(st.integers(1, 4)),
             "K": K,
@@ -185,6 +234,8 @@ if HAVE_HYPOTHESIS:
                 st.lists(st.integers(0, 5), min_size=n, max_size=n))),
             "merge": draw(st.sampled_from(MERGES)),
             "replicated": draw(st.booleans()),
+            "read_op": draw(st.one_of(st.none(),
+                                      st.sampled_from(FUSED_READ_OPS))),
             "stages": 2,
             "seed": draw(st.integers(0, 2**31 - 1)),
         }
@@ -206,6 +257,17 @@ def test_conformance_vs_oracle_jax(case):
 def test_conformance_vs_oracle_jax_spmd(case):
     for engine in ENGINES:
         _check_with_repro(case, engine, "jax_spmd")
+
+
+@settings(max_examples=4, deadline=None, derandomize=True)
+@given(case=CASES)
+def test_conformance_fused_kernel_backends(case):
+    """The fused kernel route ("fused" on-device dispatch and the Pallas
+    kernel under interpret mode) must match the numpy oracle on values AND
+    per-phase cost, over the same shrinkable case model."""
+    case = dict(case, read_op=case.get("read_op") or "add")
+    for backend_name in KERNEL_BACKENDS:
+        _check_with_repro(case, "tdorch", backend_name)
 
 
 @settings(max_examples=6, deadline=None, derandomize=True)

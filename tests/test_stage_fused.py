@@ -1,0 +1,244 @@
+"""Interpret-mode conformance suite for the ragged fused stage kernel.
+
+Pins `kernels/stage_fused/kernel.py` (run via
+``pl.pallas_call(..., interpret=True)`` — no TPU needed) to
+`kernels/stage_fused/ref.py`, and pins the ref itself to an independent
+numpy oracle that materializes the padded `(n, max_arity, w)` view the
+generic lambda path uses. Coverage: tile-boundary geometries, arity-0
+rows, single-row batches, every read op × merge op (including the ordered
+"write" merge), and padding-row non-participation.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.fusedlam import FusedStageLambda
+from repro.core.mergeops import get_merge_op
+from repro.kernels.stage_fused.ops import FUSED_READ_OPS, fused_stage
+
+BLOCK_T, BLOCK_P = 8, 128
+MERGES = ("add", "min", "max", "or", "write")
+RTOL, ATOL = 1e-5, 1e-5
+
+
+# ---------------------------------------------------------------------------
+# independent numpy oracle: padded-gather semantics + core/mergeops ⊗
+# ---------------------------------------------------------------------------
+def oracle(values, indptr, indices, ctx, seg, order, *, num_segments,
+           read_op, finish, merge_name):
+    n = indptr.shape[0] - 1
+    w = values.shape[1]
+    arity = np.diff(indptr)
+    A = max(int(arity.max(initial=0)), 1)
+    vals = np.zeros((n, A, w))
+    mask = np.zeros((n, A), dtype=bool)
+    row = np.repeat(np.arange(n), arity)
+    col = np.arange(indices.size) - indptr[:-1][row]
+    vals[row, col] = values[indices]
+    mask[row, col] = True
+    out = FusedStageLambda(read_op, finish)(ctx, vals, mask)["update"]
+    out = np.atleast_2d(np.asarray(out))
+    live = np.flatnonzero(seg < num_segments)
+    merge = get_merge_op(merge_name)
+    combined = np.zeros((num_segments, out.shape[1]))
+    hit = np.zeros(num_segments, dtype=bool)
+    if live.size:
+        uniq, inv = np.unique(seg[live], return_inverse=True)
+        comb = merge.combine_segments(out[live], inv, uniq.size, order[live])
+        combined[uniq] = comb
+        hit[uniq] = True
+    return out, combined, hit
+
+
+def case(seed, n, K=37, w=3, c=2, num_segments=5, max_arity=6,
+         arity_zero_frac=0.2):
+    r = np.random.default_rng(seed)
+    values = r.normal(size=(K, w))
+    arity = r.integers(1, max_arity + 1, n) if max_arity else np.zeros(n, int)
+    if max_arity:
+        arity[r.random(n) < arity_zero_frac] = 0
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(arity, out=indptr[1:])
+    indices = r.integers(0, K, int(indptr[-1]))
+    pair_task = np.repeat(np.arange(n), arity)
+    ctx = r.normal(size=(n, c))
+    seg = r.integers(0, num_segments + 1, n).astype(np.int32)
+    order = r.permutation(n).astype(np.int32)
+    return values, indptr, indices, pair_task, ctx, seg, order
+
+
+def run_both(args, *, num_segments, read_op, finish, merge_name):
+    values, indptr, indices, pair_task, ctx, seg, order = args
+    uk, ck = fused_stage(values, indptr, indices, pair_task, ctx, seg,
+                         order, num_segments=num_segments, read_op=read_op,
+                         finish=finish, merge_name=merge_name,
+                         backend="interpret")
+    ur, cr = fused_stage(values, indptr, indices, pair_task, ctx, seg,
+                         order, num_segments=num_segments, read_op=read_op,
+                         finish=finish, merge_name=merge_name,
+                         backend="ref")
+    uo, co, hit = oracle(values, indptr, indices, ctx, seg, order,
+                         num_segments=num_segments, read_op=read_op,
+                         finish=finish, merge_name=merge_name)
+    # kernel vs jnp ref: full per-task output, hit-segment combine rows
+    np.testing.assert_allclose(np.asarray(uk), np.asarray(ur),
+                               rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(ck)[hit], np.asarray(cr)[hit],
+                               rtol=RTOL, atol=ATOL)
+    # both vs the independent padded-gather numpy oracle
+    np.testing.assert_allclose(np.asarray(uk), uo, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(ck)[hit], co[hit],
+                               rtol=RTOL, atol=ATOL)
+
+
+def _finish_muladd(c, r):
+    return r * c[:, :1] + c[:, 1:2]
+
+
+# ---------------------------------------------------------------------------
+# the matrix: every read op × merge op, with and without a finish epilogue
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("read_op", FUSED_READ_OPS)
+@pytest.mark.parametrize("merge_name", MERGES)
+def test_readop_x_merge(read_op, merge_name):
+    run_both(case(11, n=23), num_segments=5, read_op=read_op, finish=None,
+             merge_name=merge_name)
+
+
+@pytest.mark.parametrize("read_op", FUSED_READ_OPS)
+def test_finish_epilogue(read_op):
+    run_both(case(13, n=29), num_segments=5, read_op=read_op,
+             finish=_finish_muladd, merge_name="add")
+
+
+# ---------------------------------------------------------------------------
+# geometry edges
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [1, BLOCK_T - 1, BLOCK_T, BLOCK_T + 1,
+                               3 * BLOCK_T, 3 * BLOCK_T + 5])
+def test_task_tile_boundaries(n):
+    run_both(case(17, n=n), num_segments=4, read_op="add", finish=None,
+             merge_name="add")
+
+
+@pytest.mark.parametrize("arity", [BLOCK_P - 1, BLOCK_P, BLOCK_P + 1,
+                                   2 * BLOCK_P + 7])
+def test_pair_block_boundaries(arity):
+    """One task whose pair list crosses pair-block boundaries — the
+    dynamic-slice walk must mask the ragged tail exactly."""
+    r = np.random.default_rng(19)
+    K, w = 31, 3
+    values = r.normal(size=(K, w))
+    indptr = np.array([0, arity, arity])  # second task: arity 0
+    indices = r.integers(0, K, arity)
+    pair_task = np.zeros(arity, np.int64)
+    ctx = r.normal(size=(2, 2))
+    seg = np.array([0, 1], np.int32)
+    order = np.array([0, 1], np.int32)
+    for read_op in FUSED_READ_OPS:
+        run_both((values, indptr, indices, pair_task, ctx, seg, order),
+                 num_segments=2, read_op=read_op, finish=None,
+                 merge_name="min")
+
+
+def test_single_row_batch():
+    run_both(case(23, n=1), num_segments=1, read_op="add", finish=None,
+             merge_name="add")
+
+
+def test_all_rows_arity_zero():
+    args = case(29, n=11, max_arity=0)
+    for read_op in FUSED_READ_OPS:
+        uk, _ = fused_stage(*args, num_segments=3, read_op=read_op,
+                            finish=None, merge_name="add",
+                            backend="interpret")
+        np.testing.assert_array_equal(np.asarray(uk), 0.0)
+    run_both(args, num_segments=3, read_op="min", finish=None,
+             merge_name="add")
+
+
+def test_empty_batch_nnz_zero():
+    run_both(case(31, n=9, max_arity=0), num_segments=3, read_op="first",
+             finish=None, merge_name="write")
+
+
+def test_duplicate_reads_in_one_task():
+    values = np.arange(15, dtype=np.float64).reshape(5, 3)
+    indptr = np.array([0, 4])
+    indices = np.array([2, 2, 0, 2])
+    args = (values, indptr, indices, np.zeros(4, np.int64),
+            np.ones((1, 2)), np.zeros(1, np.int32), np.zeros(1, np.int32))
+    run_both(args, num_segments=1, read_op="add", finish=None,
+             merge_name="add")
+    uk, _ = fused_stage(*args, num_segments=1, read_op="add", finish=None,
+                        merge_name="add", backend="interpret")
+    np.testing.assert_allclose(np.asarray(uk)[0],
+                               values[2] * 3 + values[0], rtol=RTOL)
+
+
+# ---------------------------------------------------------------------------
+# padding-row non-participation
+# ---------------------------------------------------------------------------
+def test_padding_rows_do_not_participate():
+    """The kernel pads tasks to a tile multiple and pairs to a block
+    multiple internally; a batch whose every task writes must produce a
+    combine untouched by those pad rows (pad tasks carry the drop segment
+    and no live pairs)."""
+    r = np.random.default_rng(37)
+    n, K, S = BLOCK_T + 3, 17, 3  # forces 5 pad tasks in the last tile
+    values = r.normal(size=(K, 3))
+    arity = r.integers(1, 4, n)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(arity, out=indptr[1:])
+    indices = r.integers(0, K, int(indptr[-1]))
+    pair_task = np.repeat(np.arange(n), arity)
+    ctx = r.normal(size=(n, 2))
+    seg = (np.arange(n) % S).astype(np.int32)  # every task writes
+    order = np.arange(n, dtype=np.int32)
+    args = (values, indptr, indices, pair_task, ctx, seg, order)
+    for merge_name in MERGES:
+        run_both(args, num_segments=S, read_op="add", finish=None,
+                 merge_name=merge_name)
+
+
+def test_drop_segment_rows_excluded():
+    """Tasks with seg == num_segments must not leak into any combine row —
+    checked by comparing against the oracle combine over live rows only."""
+    args = case(41, n=19, num_segments=2)
+    values, indptr, indices, pair_task, ctx, seg, order = args
+    seg = seg.copy()
+    seg[::2] = 2  # half the rows dropped
+    run_both((values, indptr, indices, pair_task, ctx, seg, order),
+             num_segments=2, read_op="add", finish=None, merge_name="add")
+
+
+# ---------------------------------------------------------------------------
+# "write" merge ordering
+# ---------------------------------------------------------------------------
+def test_write_merge_order_and_row_tiebreak():
+    """Lowest order wins; equal orders break to the lowest row — including
+    across task tiles (the kernel's strict-compare accumulator)."""
+    n = 2 * BLOCK_T + 4  # winners and ties straddle tile boundaries
+    values = np.arange(6, dtype=np.float64).reshape(2, 3)
+    indptr = np.arange(n + 1)
+    indices = np.zeros(n, np.int64)
+    ctx = np.arange(n, dtype=np.float64)[:, None] + 1.0
+    seg = np.zeros(n, np.int32)  # everyone writes segment 0
+    order = np.full(n, 7, np.int32)
+    order[BLOCK_T + 2] = 1  # winner lives in the second tile
+    args = (values, indptr, indices, np.arange(n), ctx, seg, order)
+    _, ck = fused_stage(*args, num_segments=1, read_op="add",
+                        finish=lambda c, r: r * c, merge_name="write",
+                        backend="interpret")
+    expect = values[0] * (BLOCK_T + 3)  # row BLOCK_T+2's finished update
+    np.testing.assert_allclose(np.asarray(ck)[0], expect, rtol=RTOL)
+    run_both(args, num_segments=1, read_op="add", finish=None,
+             merge_name="write")
+    # all-tied orders: the first row must win
+    order[:] = 7
+    _, ck = fused_stage(values, indptr, indices, np.arange(n), ctx, seg,
+                        order, num_segments=1, read_op="add",
+                        finish=lambda c, r: r * c, merge_name="write",
+                        backend="interpret")
+    np.testing.assert_allclose(np.asarray(ck)[0], values[0], rtol=RTOL)
