@@ -12,6 +12,7 @@
     (beyond) bench_moe        TD-Orch vs push/pull as the MoE dispatcher
     (beyond) bench_kernels    per-kernel microbenchmarks
     (beyond) bench_serve      streaming serve: adaptive batching + overlap
+    (beyond) bench_elastic    live migration under a nonstationary hot-set shift
 
 Prints ``name,us_per_call,derived`` CSV. `--quick` shrinks sizes ~10×.
 `--json PATH` writes schema-versioned per-suite row files (fixed seeds, so
@@ -24,9 +25,9 @@ import argparse
 import sys
 import time
 
-from . import (bench_ablation, bench_backend, bench_breakdown, bench_graph,
-               bench_kernels, bench_moe, bench_plan, bench_scaling,
-               bench_serve, bench_skew, bench_spmd, bench_ycsb)
+from . import (bench_ablation, bench_backend, bench_breakdown, bench_elastic,
+               bench_graph, bench_kernels, bench_moe, bench_plan,
+               bench_scaling, bench_serve, bench_skew, bench_spmd, bench_ycsb)
 from .common import print_csv, write_json
 
 SUITES = {
@@ -42,6 +43,7 @@ SUITES = {
     "moe": bench_moe,
     "kernels": bench_kernels,
     "serve": bench_serve,
+    "elastic": bench_elastic,
 }
 
 

@@ -118,7 +118,10 @@ class CheckpointManager:
 
     def save_async(self, step: int, tree, extra=None) -> None:
         self.wait()  # one in flight at a time
-        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async
+        # snapshot before going async — np.array (not asarray): host numpy
+        # leaves must be copied, or the caller's next mutation leaks into
+        # the checkpoint mid-write
+        host_tree = jax.tree.map(lambda x: np.array(x), tree)
 
         def work():
             try:

@@ -5,9 +5,13 @@
 # (shard_map) production realization used by the LM stack.
 from .backend import JaxBackend, NumpyBackend, SpmdBackend, make_backend
 from .comm_forest import CommForest, theory_fanout
-from .cost import (CostAccumulator, PhaseCost, SessionReport, StageReport,
-                   assert_cost_parity, assert_session_parity)
+from .config import KWARG_ALIASES, SessionConfig, resolve_session_config
+from .cost import (ELASTIC_PHASES, CostAccumulator, PhaseCost, SessionReport,
+                   StageReport, assert_cost_parity, assert_session_parity)
 from .datastore import DataStore, ShardLayout, TaskBatch
+from .elasticity import (ElasticityConfig, ElasticityManager, MigrationConfig,
+                         MigrationPlanner, RecoveryConfig, RecoveryManager,
+                         StealConfig, WorkStealer, make_elasticity)
 from .engine import OrchestrationResult, TDOrchEngine
 from .baselines import DirectPullEngine, DirectPushEngine, SortBasedEngine
 from .execution import gather_values
@@ -22,9 +26,13 @@ from .session import Orchestrator
 __all__ = [
     "JaxBackend", "NumpyBackend", "SpmdBackend", "make_backend",
     "CommForest", "theory_fanout",
+    "KWARG_ALIASES", "SessionConfig", "resolve_session_config",
     "CostAccumulator", "PhaseCost", "SessionReport", "StageReport",
-    "assert_cost_parity", "assert_session_parity",
+    "assert_cost_parity", "assert_session_parity", "ELASTIC_PHASES",
     "DataStore", "ShardLayout", "TaskBatch",
+    "ElasticityConfig", "ElasticityManager", "MigrationConfig",
+    "MigrationPlanner", "RecoveryConfig", "RecoveryManager",
+    "StealConfig", "WorkStealer", "make_elasticity",
     "OrchestrationResult", "TDOrchEngine",
     "DirectPullEngine", "DirectPushEngine", "SortBasedEngine",
     "gather_values",

@@ -23,6 +23,16 @@ import numpy as np
 # separate the amortized replication investment from serving traffic.
 REPLICA_REFRESH_PHASE = "replica_refresh"
 
+# Elasticity phases (core/elasticity.py). Each is charged as its own named
+# phase on the stage it happens in, so the migration/steal/recovery
+# investment stays separable from serving traffic exactly like
+# `replica_refresh` — and so parity tests can compare an elastic run against
+# an uninterrupted one with `assert_cost_parity(..., ignore=ELASTIC_PHASES)`.
+MIGRATION_PHASE = "migration"
+STEAL_PHASE = "phase3_steal"
+RECOVERY_PHASE = "recovery"
+ELASTIC_PHASES = (MIGRATION_PHASE, STEAL_PHASE, RECOVERY_PHASE)
+
 
 @dataclasses.dataclass
 class PhaseCost:
@@ -111,6 +121,16 @@ class CostAccumulator:
         words = np.broadcast_to(np.asarray(words, dtype=np.float64).ravel(),
                                 machine.shape)
         np.add.at(ph.local, machine, words)
+
+    def ingress(self, machine: np.ndarray, words) -> None:
+        """Record words arriving from OUTSIDE the mesh (durable storage,
+        e.g. a checkpoint restore during failure recovery): received by
+        `machine`, sent by nobody — no peer's send budget is charged."""
+        ph = self._require()
+        machine = np.asarray(machine, dtype=np.int64).ravel()
+        words = np.broadcast_to(np.asarray(words, dtype=np.float64).ravel(),
+                                machine.shape)
+        np.add.at(ph.recv, machine, words)
 
     def tick(self, rounds: int = 1) -> None:
         self._require().rounds += rounds
@@ -208,10 +228,18 @@ class StageReport:
         }
 
 
-def assert_cost_parity(a: "StageReport", b: "StageReport") -> None:
+def assert_cost_parity(a: "StageReport", b: "StageReport",
+                       ignore=()) -> None:
     """The backend-parity contract, executable: two stage reports must carry
     identical per-phase words/rounds/work — exact equality, no tolerance.
-    Raises AssertionError naming the first differing phase/field."""
+    Raises AssertionError naming the first differing phase/field.
+
+    `ignore` names phases dropped from BOTH sides before comparing — what
+    lets a recovered run (extra `recovery`/`migration` phases) be pinned
+    bit-identical to an uninterrupted one on everything else."""
+    if ignore:
+        a = StageReport(a.P, [ph for ph in a.phases if ph.name not in ignore])
+        b = StageReport(b.P, [ph for ph in b.phases if ph.name not in ignore])
     names_a = [ph.name for ph in a.phases]
     names_b = [ph.name for ph in b.phases]
     assert names_a == names_b, f"phase lists differ: {names_a} vs {names_b}"
@@ -224,17 +252,19 @@ def assert_cost_parity(a: "StageReport", b: "StageReport") -> None:
                 f"{pa.name}: per-machine {field} differ ({va} vs {vb})"
 
 
-def assert_session_parity(a: "SessionReport", b: "SessionReport") -> None:
+def assert_session_parity(a: "SessionReport", b: "SessionReport",
+                          ignore=()) -> None:
     """Session-level parity: same number of stages, and every stage's
     per-phase words/rounds/work bit-identical. This is what pins a
     plan-driven run against its hand-rolled `run_stage`/`edge_map` loop
     (`tests/test_plan.py`): the StagePlan runner must hit the session's
-    entry points in exactly the same order with exactly the same batches."""
+    entry points in exactly the same order with exactly the same batches.
+    `ignore` forwards to `assert_cost_parity` (elastic-phase exclusion)."""
     assert a.num_stages == b.num_stages, \
         f"stage counts differ: {a.num_stages} vs {b.num_stages}"
     for i, (sa, sb) in enumerate(zip(a.stages, b.stages)):
         try:
-            assert_cost_parity(sa, sb)
+            assert_cost_parity(sa, sb, ignore=ignore)
         except AssertionError as e:
             raise AssertionError(f"stage {i}: {e}") from None
 
@@ -252,6 +282,10 @@ class SessionReport:
 
     P: int
     stages: List[StageReport] = dataclasses.field(default_factory=list)
+    # per-machine stolen-task tallies (filled by record_steals; None = no
+    # stealing happened, so reports stay cheap when elasticity is off)
+    _stolen_out: Optional[np.ndarray] = None
+    _stolen_in: Optional[np.ndarray] = None
 
     def add(self, report: StageReport) -> None:
         if report.P != self.P:
@@ -311,6 +345,54 @@ class SessionReport:
         """Words served from machine-local replicas instead of the wire."""
         return float(self.local.sum())
 
+    # ---- elasticity accounting (core/elasticity.py) -----------------------
+    def _phase_words(self, name: str) -> float:
+        return sum(float(ph.sent.sum()) for st in self.stages
+                   for ph in st.phases if ph.name == name)
+
+    @property
+    def migration_words(self) -> float:
+        """Words spent moving re-homed chunks (the `migration` phase)."""
+        return self._phase_words(MIGRATION_PHASE)
+
+    @property
+    def steal_words(self) -> float:
+        """Words spent shipping stolen task tiles (the `phase3_steal` phase)."""
+        return self._phase_words(STEAL_PHASE)
+
+    @property
+    def recovery_words(self) -> float:
+        """Words spent restoring a lost machine's chunks — peer transfers
+        from replica holders plus checkpoint-storage ingress (recv with no
+        in-mesh sender), both under the `recovery` phase. Counted on the
+        receive side so the two restore sources add up consistently."""
+        return sum(float(ph.recv.sum()) for st in self.stages
+                   for ph in st.phases if ph.name == RECOVERY_PHASE)
+
+    def record_steals(self, src: np.ndarray, dst: np.ndarray) -> None:
+        """Fold one stage's stolen-task movements (donor machine per task,
+        thief machine per task) into the per-machine steal counters that
+        `per_machine()` surfaces."""
+        if self._stolen_out is None:
+            self._stolen_out = np.zeros(self.P, dtype=np.int64)
+            self._stolen_in = np.zeros(self.P, dtype=np.int64)
+        self._stolen_out += np.bincount(np.asarray(src, dtype=np.int64),
+                                        minlength=self.P)
+        self._stolen_in += np.bincount(np.asarray(dst, dtype=np.int64),
+                                       minlength=self.P)
+
+    @property
+    def stolen_out(self) -> np.ndarray:
+        """(P,) tasks each machine donated to Phase-3 work stealing."""
+        out = self._stolen_out
+        return out if out is not None else np.zeros(self.P, dtype=np.int64)
+
+    @property
+    def stolen_in(self) -> np.ndarray:
+        """(P,) tasks each machine stole before Phase-3 execution."""
+        out = self._stolen_in
+        return out if out is not None else np.zeros(self.P, dtype=np.int64)
+
     @property
     def comm_time(self) -> float:
         return sum(st.comm_time for st in self.stages)
@@ -369,6 +451,8 @@ class SessionReport:
             "max_h": float(h.max(initial=0.0)),
             "mean_h": mean_h,
             "h_ratio": float(h.max(initial=0.0) / max(mean_h, 1e-12)),
+            "stolen_in": self.stolen_in, "stolen_out": self.stolen_out,
+            "stolen_tasks": int(self.stolen_in.sum()),
         }
 
     def summary(self) -> Dict[str, float]:
@@ -380,6 +464,10 @@ class SessionReport:
             "replica_refresh_words": self.replica_refresh_words,
             "steady_state_words": self.steady_state_words,
             "replica_local_words": self.replica_local_words,
+            "migration_words": self.migration_words,
+            "steal_words": self.steal_words,
+            "recovery_words": self.recovery_words,
+            "stolen_tasks": int(self.stolen_in.sum()),
             "comm_time": self.comm_time,
             "compute_time": self.compute_time,
             "comm_imbalance": self.imbalance()["comm"],

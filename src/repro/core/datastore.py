@@ -107,12 +107,37 @@ class DataStore:
         by user code): invalidates any backend device cache."""
         self.version += 1
 
+    def rehome(self, keys: np.ndarray, new_home: np.ndarray) -> None:
+        """Atomically move chunks to new home machines (live migration /
+        shrink-mode recovery, `core/elasticity.py`).
+
+        Mutates `home` IN PLACE — subsystems that alias the placement map
+        (the replicator's `HotChunkReplicator.home`, a cached `ShardLayout`'s
+        `owner`) see the move without re-plumbing — then drops the cached
+        shard layout (its slot/slab geometry is stale) and bumps `version`
+        so device-resident value/replica caches keyed on it rebuild against
+        the new placement. Values are untouched: migration moves ownership,
+        not data content.
+        """
+        keys = np.asarray(keys, dtype=np.int64)
+        if keys.size == 0:
+            return
+        new_home = np.broadcast_to(
+            np.asarray(new_home, dtype=np.int64).ravel(), keys.shape)
+        if (new_home < 0).any() or (new_home >= self.P).any():
+            raise ValueError(
+                f"rehome targets must be machine ids in [0, {self.P})")
+        self.home[keys] = new_home
+        self.__dict__.pop("_shard_layout", None)
+        self.version += 1
+
     def snapshot(self) -> np.ndarray:
         return self.values.copy()
 
     def shard_layout(self) -> ShardLayout:
-        """The store's sharded-residency geometry (cached: `home` is fixed
-        at creation). Shard m's slab holds exactly the chunks with
+        """The store's sharded-residency geometry (cached; `rehome()` is the
+        one mutation path and drops the cache). Shard m's slab holds exactly
+        the chunks with
         ``home == m``, in ascending key order; the padding rows that square
         the slabs off to the largest per-machine count are addressed by
         nobody (their key is ``num_keys``)."""

@@ -126,6 +126,7 @@ class TDOrchEngine:
         write_back: str | MergeOp = "add",
         return_results: bool = False,
         replicas: ReplicaSet | None = None,
+        stealer=None,
     ) -> OrchestrationResult:
         merge = get_merge_op(write_back)
         P, forest = self.P, self.forest
@@ -162,6 +163,21 @@ class TDOrchEngine:
         cost.end()
         exec_site = tasks.origin.copy()
         exec_site[has_read] = pair_site[tasks.read_indptr[:-1][has_read]]
+
+        # ---------------- Phase-3 work stealing (core/elasticity.py) -------
+        # Rebalance exec-site assignment BEFORE Phase 2, so a stolen task's
+        # secondary values forward straight to the thief. Replica-local
+        # primaries stay put — stealing them would forfeit the local read.
+        if stealer is not None:
+            cost.begin("phase3_steal")
+            prim_local = np.zeros(tasks.n, dtype=bool)
+            if pair_local.any():
+                prim_local[has_read] = \
+                    pair_local[tasks.read_indptr[:-1][has_read]]
+            exec_site = stealer.steal(tasks, exec_site, cost,
+                                      value_width=store.value_width,
+                                      eligible=~prim_local)
+            cost.end()
 
         # ---------------- Phase 2: push-pull co-location -------------------
         cost.begin("phase2_push_pull")

@@ -19,8 +19,14 @@ reports are bit-identical across all three) — `kernel_backend=` picks how
 fused-able lambdas (`repro.core.fused_read`) reach the kernel tree on a
 device backend ("auto"/"fused" — the ragged-native `stage_fused` kernel;
 "interpret" — the same kernel interpreted on CPU; "padded" — the legacy
-padded gather) — and `replication=` opts into the adaptive hot-chunk
-subsystem — all forward to the underlying `Orchestrator`.
+padded gather) — `replication=` opts into the adaptive hot-chunk
+subsystem — and `elasticity=` opts into the elastic-cluster subsystem
+(live chunk migration, Phase-3 work stealing, stage-boundary failure
+recovery; `repro.core.elasticity`) — all forward to the underlying
+`Orchestrator`. `config=` carries every session-level option in one
+`SessionConfig` (core/config.py); the per-kwarg spellings remain as a
+compatibility shim resolved through the same alias table, and passing a
+kwarg that contradicts the config raises.
 
 `orchestration()` is the one-shot shim: it builds a throwaway `Orchestrator`
 session per call. Workloads that chain stages (graph rounds, kv batches)
@@ -38,14 +44,19 @@ import numpy as np
 # importing the engine modules populates the registry
 from . import baselines as _baselines  # noqa: F401
 from . import engine as _engine  # noqa: F401
+from .config import SessionConfig, resolve_session_config
 from .datastore import DataStore, TaskBatch
+from .elasticity import (ElasticityConfig, MigrationConfig, RecoveryConfig,
+                         StealConfig)
 from .engine import OrchestrationResult
 from .plan import CARRY, PlanResult, StagePlan
 from .registry import ENGINES, make_engine, register_engine
 from .session import Orchestrator
 
 __all__ = ["ENGINES", "make_engine", "register_engine", "orchestration",
-           "Orchestrator", "StagePlan", "CARRY", "PlanResult"]
+           "Orchestrator", "StagePlan", "CARRY", "PlanResult",
+           "SessionConfig", "resolve_session_config", "ElasticityConfig",
+           "MigrationConfig", "StealConfig", "RecoveryConfig"]
 
 
 def orchestration(
@@ -54,15 +65,19 @@ def orchestration(
     store: DataStore,
     write_back: str = "add",
     *,
-    engine: str = "tdorch",
+    config=None,
+    engine: str = None,
     return_results: bool = False,
     backend=None,
     kernel_backend=None,
     replication=None,
+    replicate=None,
+    elasticity=None,
     **engine_opts,
 ) -> OrchestrationResult:
-    sess = Orchestrator(store, engine=engine, backend=backend,
+    sess = Orchestrator(store, engine=engine, config=config, backend=backend,
                         kernel_backend=kernel_backend,
-                        replication=replication, **engine_opts)
+                        replication=replication, replicate=replicate,
+                        elasticity=elasticity, **engine_opts)
     return sess.run_stage(tasks, f, write_back=write_back,
                           return_results=return_results)

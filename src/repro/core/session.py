@@ -18,13 +18,16 @@ throwaway session.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional
+import inspect
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
 from .backend import make_backend
+from .config import SessionConfig, resolve_session_config
 from .cost import SessionReport, StageReport
 from .datastore import DataStore, TaskBatch
+from .elasticity import make_elasticity
 from .engine import OrchestrationResult
 from .mergeops import MergeOp
 from .registry import make_engine
@@ -58,27 +61,57 @@ class Orchestrator:
     ``replica_refresh`` phase on that stage's report), handing the directory
     to the engine, and folding each stage's Phase-1 refcounts back into the
     histogram.
+
+    `config=` accepts a `SessionConfig` (core/config.py) carrying all of the
+    above in one object — the same config every front door
+    (`orchestration()`, `GraphSession`, `DistributedHashTable`,
+    `serve.Frontend`) takes. The per-kwarg spellings remain as a
+    compatibility shim resolved through the same alias table; passing a
+    kwarg that contradicts the config raises.
+
+    `elasticity=` (or `SessionConfig.elasticity`) turns on the
+    elastic-cluster subsystem (`core.elasticity`): an `ElasticityConfig`
+    bundling live chunk migration (`migration=`), Phase-3 work stealing
+    (`stealing=`), and stage-boundary failure recovery (`recovery=`).
+    Boundary work is charged under dedicated `migration`/`phase3_steal`/
+    `recovery` phases on the stage it happens in; an existing
+    `ElasticityManager` is adopted as-is (shared across forks).
     """
 
-    def __init__(self, store: DataStore, engine: str = "tdorch", *,
+    def __init__(self, store: DataStore, engine=None, *, config=None,
                  backend=None, kernel_backend=None, replication=None,
-                 **engine_opts):
+                 replicate=None, elasticity=None, **engine_opts):
+        cfg = resolve_session_config(
+            config, engine_opts=engine_opts, engine=engine, backend=backend,
+            kernel_backend=kernel_backend, replication=replication,
+            replicate=replicate, elasticity=elasticity)
+        self.config: SessionConfig = cfg
         self.store = store
+        engine = cfg.engine
         self.engine_name = engine if isinstance(engine, str) else type(engine).__name__
         if isinstance(engine, str):
             self.engine = make_engine(
                 engine, store.P,
-                backend=make_backend(backend, kernel_backend=kernel_backend),
-                **engine_opts)
+                backend=make_backend(cfg.backend,
+                                     kernel_backend=cfg.kernel_backend),
+                **cfg.engine_opts)
         else:
-            if backend is not None or kernel_backend is not None:
+            if cfg.backend is not None or cfg.kernel_backend is not None:
                 raise ValueError(
                     "pass backend= to the engine's constructor when handing "
                     "Orchestrator an engine instance — a session cannot "
                     "swap the backend of a prebuilt engine")
             self.engine = engine
-        self.replicator = make_replicator(replication, store.home, store.P,
-                                          store.chunk_words)
+        self.replicator = make_replicator(cfg.replication, store.home,
+                                          store.P, store.chunk_words)
+        self.elastic = make_elasticity(cfg.elasticity, store)
+        # work stealing plugs in between exec-site assignment and Phase 3 —
+        # only engines whose run_stage declares `stealer=` support it (pull
+        # executes strictly at the origin, sort is balanced by construction)
+        self._stealer_ok = self.elastic is not None \
+            and self.elastic.stealer is not None \
+            and "stealer" in inspect.signature(
+                self.engine.run_stage).parameters
         # a backend that maps machines onto physical devices (jax_spmd)
         # must fail at construction, not mid-run, when the mesh can't fit
         check = getattr(self.backend, "validate_machines", None)
@@ -132,7 +165,8 @@ class Orchestrator:
         execution and overlaps only the host-side admission work.
         """
         return Orchestrator(self.store, engine=self.engine,
-                            replication=self.replicator)
+                            replication=self.replicator,
+                            elasticity=self.elastic)
 
     # ------------------------------------------------------------------
     def run_stage(
@@ -144,13 +178,31 @@ class Orchestrator:
         return_results: bool = False,
     ) -> OrchestrationResult:
         """Run one orchestration stage against the session's store and fold
-        its cost report into the session report."""
+        its cost report into the session report.
+
+        With elasticity on, the stage boundary runs first: failure recovery
+        (dead machines' chunks restored from the last boundary snapshot,
+        then this stage proceeds — which IS the replay) and any due
+        migration election, each charged as its own phase on this stage's
+        bill; the work stealer is threaded into the engine's exec-site
+        assignment; and the post-stage write-log/boundary bookkeeping runs
+        last."""
+        pre: List[StageReport] = []
+        if self.elastic is not None:
+            tasks = self.elastic.adapt_batch(tasks)
         tasks.validate(self.store)
         extra: Dict[str, object] = {}
+        if self.elastic is not None:
+            pre.extend(self.elastic.on_stage_start(
+                self.store, self.replicas, self.backend))
+            if self._stealer_ok:
+                extra["stealer"] = self.elastic.stealer
         ref_report: Optional[StageReport] = None
         if self.replicator is not None:
             ref_report = self.replicator.maybe_refresh()
             extra["replicas"] = self.replicator.replicas
+        if ref_report is not None:
+            pre.append(ref_report)
         res = self.engine.run_stage(tasks, self.store, f, write_back=write_back,
                                     return_results=return_results, **extra)
         if self.replicator is not None:
@@ -162,12 +214,19 @@ class Orchestrator:
                 self.replicator.observe(res.refcount)
             else:
                 self.replicator.observe_keys(tasks.read_indices)
-        if ref_report is not None:
-            # the refresh broadcast belongs to this stage's bill, as its own
-            # phase — phase_totals() and the SessionReport refresh/steady
-            # split keep it separable
-            res.report = StageReport(res.report.P,
-                                     ref_report.phases + res.report.phases)
+        if self.elastic is not None:
+            self.elastic.observe(tasks)
+            self.elastic.after_stage(tasks, self.store)
+            if self._stealer_ok:
+                for src, dst in self.elastic.stealer.drain():
+                    self._report.record_steals(src, dst)
+        if pre:
+            # boundary work (recovery, migration, replica refresh) belongs
+            # to this stage's bill, each as its own phase — phase_totals()
+            # and the SessionReport phase splits keep them separable
+            res.report = StageReport(
+                res.report.P,
+                [ph for r in pre for ph in r.phases] + res.report.phases)
         self._report.add(res.report)
         return res
 

@@ -25,6 +25,7 @@ from typing import List, Tuple
 import numpy as np
 
 from ..core.backend import make_backend
+from ..core.config import resolve_session_config
 from ..core.cost import CostAccumulator, SessionReport
 from ..core.replication import make_replicator
 
@@ -117,6 +118,14 @@ class GraphSession:
     `kernel_backend=` forwards to the device backend's kernel dispatch
     ("auto"/"fused"/"interpret"/"padded" — see `repro.core.JaxBackend`),
     reaching any fused-able lambdas driven through this session.
+
+    `config=` accepts the same `SessionConfig` every other front door takes;
+    its shared fields (backend / kernel_backend / replication) resolve
+    through the one alias table, and a kwarg that contradicts the config
+    raises. Graph rounds never reach exec-site assignment or the
+    Orchestrator stage boundary, so `elasticity=` in the config is rejected
+    here rather than silently ignored. `engine=` in the config is irrelevant
+    to tree-structured edge maps and is ignored.
     """
 
     og: "OrchestratedGraph"  # noqa: F821 — forward ref, avoids import cycle
@@ -124,9 +133,25 @@ class GraphSession:
     replication: object = None  # None | True | dict | ReplicationConfig
     backend: object = None  # None/"numpy" oracle | "jax" jitted | instance
     kernel_backend: object = None  # fused-kernel dispatch (device backends)
+    config: object = None  # SessionConfig | dict — the unified spelling
+    replicate: object = None  # legacy alias for replication
 
     def __post_init__(self):
         og = self.og
+        cfg = resolve_session_config(
+            self.config, backend=self.backend,
+            kernel_backend=self.kernel_backend,
+            replication=self.replication, replicate=self.replicate)
+        if cfg.elasticity is not None:
+            raise ValueError(
+                "GraphSession does not support elasticity: DistEdgeMap "
+                "rounds charge source/destination trees directly and never "
+                "reach the Orchestrator stage boundary where migration/"
+                "stealing/recovery plug in. Drive the workload through an "
+                "Orchestrator (core/session.py) for elastic execution.")
+        self.backend = cfg.backend
+        self.kernel_backend = cfg.kernel_backend
+        self.replication = cfg.replication
         self.src_charger = TreeCharger(og.vertex_home, og.src_grp_indptr,
                                        og.src_grp_machines, og.C)
         self.replicator = make_replicator(self.replication, og.vertex_home,

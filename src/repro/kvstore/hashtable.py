@@ -22,7 +22,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core import (CARRY, DataStore, OrchestrationResult, Orchestrator,
-                    ReplicationConfig, SessionReport, StagePlan, TaskBatch)
+                    SessionReport, StagePlan, TaskBatch,
+                    resolve_session_config)
 from ..serve import Frontend, RequestFuture  # noqa: F401 (RequestFuture: API)
 
 
@@ -42,15 +43,20 @@ def _flatten_lambda(contexts, vals, mask):
     return {"result": flat}
 
 
-def _replication_sig(replicate):
-    """Hashable session-cache key for a `replicate=` spec."""
-    if replicate is None or replicate is False:
+def _spec_sig(spec):
+    """Hashable session-cache key for a `replicate=`/`elasticity=`-style
+    spec (None/False → off, dicts by sorted items, live objects by id)."""
+    if spec is None or spec is False:
         return None
-    if isinstance(replicate, dict):
-        return tuple(sorted(replicate.items()))
-    if isinstance(replicate, ReplicationConfig):
-        return replicate
-    return id(replicate) if not isinstance(replicate, bool) else True
+    if spec is True:
+        return True
+    if isinstance(spec, dict):
+        return tuple(sorted((k, _spec_sig(v)) for k, v in spec.items()))
+    try:
+        hash(spec)
+    except TypeError:
+        return id(spec)
+    return spec
 
 
 @dataclasses.dataclass
@@ -109,8 +115,9 @@ class DistributedHashTable:
         self.store.write_rows(keys, values)
 
     # ---- sessions ----------------------------------------------------------
-    def session(self, engine: str = "tdorch", replicate=None, backend=None,
-                **engine_opts) -> Orchestrator:
+    def session(self, engine=None, replicate=None, backend=None, *,
+                config=None, kernel_backend=None, replication=None,
+                elasticity=None, **engine_opts) -> Orchestrator:
         """The table's cached long-lived session for `engine` (+opts): the
         engine and its CommForest are constructed once, then reused by every
         batch routed through it.
@@ -125,23 +132,35 @@ class DistributedHashTable:
         sessions are cached per backend. A jax session keeps the table's
         values device-resident across batches; a jax_spmd session shards
         them — each mesh device materializes only the buckets it homes.
+
+        `elasticity=` opts the session into the elastic-cluster subsystem
+        (migration / stealing / recovery, `repro.core.elasticity`), and
+        `config=` carries all of the above as one `SessionConfig` — every
+        kwarg here resolves through the same alias table the core session
+        uses, so `replicate=` and `replication=` can never drift, and a
+        kwarg that contradicts the config raises.
         """
-        sig = (engine, _replication_sig(replicate),
-               backend if isinstance(backend, (str, type(None))) else id(backend),
-               tuple(sorted(engine_opts.items())))
+        cfg = resolve_session_config(
+            config, engine_opts=engine_opts, engine=engine, backend=backend,
+            kernel_backend=kernel_backend, replication=replication,
+            replicate=replicate, elasticity=elasticity)
+        sig = (cfg.engine if isinstance(cfg.engine, str) else id(cfg.engine),
+               _spec_sig(cfg.replication),
+               cfg.backend if isinstance(cfg.backend, (str, type(None)))
+               else id(cfg.backend),
+               cfg.kernel_backend, _spec_sig(cfg.elasticity),
+               tuple(sorted(cfg.engine_opts.items())))
         sess = self._sessions.get(sig)
         if sess is None:
-            sess = self._sessions[sig] = Orchestrator(
-                self.store, engine=engine, backend=backend,
-                replication=replicate or None, **engine_opts)
+            sess = self._sessions[sig] = Orchestrator(self.store, config=cfg)
         return sess
 
-    def session_report(self, engine: str = "tdorch", replicate=None,
-                       backend=None, **engine_opts) -> SessionReport:
+    def session_report(self, engine=None, replicate=None,
+                       backend=None, **kw) -> SessionReport:
         """Accumulated cross-batch costs for the session keyed by `engine`
         (+the same opts the batches were run with)."""
         return self.session(engine, replicate=replicate, backend=backend,
-                            **engine_opts).report
+                            **kw).report
 
     # ---- single-key batches ------------------------------------------------
     def _make_batch(self, keys: np.ndarray, is_read: np.ndarray,
@@ -173,19 +192,22 @@ class DistributedHashTable:
         is_read: np.ndarray,
         operand: np.ndarray,
         *,
-        engine: str = "tdorch",
+        engine: str = None,
         origin: Optional[np.ndarray] = None,
         replicate=None,
         backend=None,
+        config=None,
         **engine_opts,
     ) -> KVResult:
         """Run one YCSB-style batch: GETs return values; UPDATEs write
         multiply-and-add results back. `replicate=` routes the batch through
         the table's replicating session for this engine (see `session`);
-        `backend=` through its numpy-oracle or jitted-jax session."""
+        `backend=` through its numpy-oracle or jitted-jax session;
+        `config=` carries the whole session spec as one `SessionConfig`."""
         tasks = self._make_batch(keys, is_read, operand, origin)
         res: OrchestrationResult = self.session(
-            engine, replicate=replicate, backend=backend, **engine_opts
+            engine, replicate=replicate, backend=backend, config=config,
+            **engine_opts
         ).run_stage(tasks, _muladd_lambda, write_back="write",
                     return_results=True)
         return KVResult(values=res.results, report=res.report, refcount=res.refcount)
@@ -198,9 +220,10 @@ class DistributedHashTable:
         *,
         follow=None,
         max_hops: Optional[int] = None,
-        engine: str = "tdorch",
+        engine: str = None,
         replicate=None,
         backend=None,
+        config=None,
         **engine_opts,
     ) -> ChainResult:
         """YCSB-style dependent read-modify-write chains as ONE `StagePlan`:
@@ -239,7 +262,7 @@ class DistributedHashTable:
         fetched = np.full((n, depth, w), np.nan)
         touched = np.full((n, depth), -1, dtype=np.int64)
         sess = self.session(engine, replicate=replicate, backend=backend,
-                            **engine_opts)
+                            config=config, **engine_opts)
 
         def emit(state, res):
             j = state.round
@@ -277,10 +300,11 @@ class DistributedHashTable:
         self,
         key_groups: Sequence[Sequence[int]] | Tuple[np.ndarray, np.ndarray],
         *,
-        engine: str = "tdorch",
+        engine: str = None,
         origin: Optional[np.ndarray] = None,
         replicate=None,
         backend=None,
+        config=None,
         **engine_opts,
     ) -> MultiGetResult:
         """One ragged multi-get batch: task i fetches every key in
@@ -310,7 +334,8 @@ class DistributedHashTable:
         w = self.store.value_width
 
         res = self.session(
-            engine, replicate=replicate, backend=backend, **engine_opts
+            engine, replicate=replicate, backend=backend, config=config,
+            **engine_opts
         ).run_stage(tasks, _flatten_lambda, write_back="add",
                     return_results=True)
         values = res.results.reshape(n, A, w) if A > 1 else res.results[:, None, :]
@@ -325,8 +350,9 @@ class DistributedHashTable:
                               refcount=res.refcount)
 
     # ---- streaming serving mode (repro.serve) ------------------------------
-    def serve(self, *, engine: str = "tdorch", backend=None,
+    def serve(self, *, engine: str = None, backend=None,
               kernel_backend=None, replicate=None, config=None,
+              session_config=None,
               mode: str = "thread", double_buffer: bool = True,
               **kw) -> "KVFrontend":
         """The table's streaming front door: a `repro.serve.Frontend` over a
@@ -338,16 +364,16 @@ class DistributedHashTable:
 
         `engine=`/`backend=`/`kernel_backend=`/`replicate=` select the
         session exactly as `session()` does (the frontend forks it for the
-        second buffer);
+        second buffer); `session_config=` carries the same selection as one
+        `SessionConfig` (including `elasticity=`);
         `config` takes `repro.serve.BatchingConfig` knobs (or a dict);
         `mode="sync"` runs the pipeline inline and deterministic, `"thread"`
         (default) runs the double-buffered router/executor pair. Close the
         frontend (or use it as a context manager) when done.
         """
-        opts = {} if kernel_backend is None \
-            else {"kernel_backend": kernel_backend}
         sess = self.session(engine, replicate=replicate, backend=backend,
-                            **opts)
+                            kernel_backend=kernel_backend,
+                            config=session_config)
         return KVFrontend(self, sess, config=config, mode=mode,
                           double_buffer=double_buffer, **kw)
 

@@ -80,10 +80,12 @@ class Frontend:
     """Streaming request admission over double-buffered Orchestrator
     sessions.
 
-    `session` is the pinned buffer-A session (any engine/backend); with
+    `session` is the pinned buffer-A session (any engine/backend) — or a
+    bare `DataStore`, in which case `session_config=` (a `SessionConfig`,
+    core/config.py) shapes the session the Frontend constructs. With
     `double_buffer=True` (default) buffer B is `session.fork()` — same
-    store, shared engine/forest/device caches/replication state, its own
-    cost ledger — and fired batches alternate between the two.
+    store, shared engine/forest/device caches/replication/elasticity state,
+    its own cost ledger — and fired batches alternate between the two.
 
     Request kinds are registered with `register(tag, fn, ...)`; `submit`
     admits one request under that tag and returns a `RequestFuture`
@@ -92,8 +94,20 @@ class Frontend:
     """
 
     def __init__(self, session, *, config: BatchingConfig | dict | None = None,
+                 session_config=None,
                  mode: str = "thread", double_buffer: bool = True,
                  clock: Callable[[], float] = time.monotonic):
+        if not hasattr(session, "run_stage"):
+            # a bare DataStore: build the buffer-A session here from the
+            # unified SessionConfig (core/config.py) — the same config=
+            # every other front door takes
+            from ..core.session import Orchestrator
+            session = Orchestrator(session, config=session_config)
+        elif session_config is not None:
+            raise ValueError(
+                "session_config= shapes a session the Frontend constructs — "
+                "pass the DataStore, or configure the prebuilt session "
+                "yourself and drop session_config=")
         if isinstance(config, dict):
             config = BatchingConfig(**config)
         self.config = config or BatchingConfig()

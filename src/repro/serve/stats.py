@@ -178,13 +178,34 @@ class ServeStats:
             out["window_s"] = window
         if sessions:
             stages = words = rounds = 0
-            local = 0.0
+            local = mig = steal = rec = 0.0
+            stolen = 0
             for s in sessions:
                 rep = s.report
                 stages += rep.num_stages
                 words += float(rep.sent.sum())
                 rounds += rep.rounds
                 local += rep.replica_local_words
+                mig += rep.migration_words
+                steal += rep.steal_words
+                rec += rep.recovery_words
+                stolen += int(rep.stolen_out.sum())
             out["session"] = {"stages": stages, "total_words": words,
-                              "rounds": rounds, "replica_local_words": local}
+                              "rounds": rounds, "replica_local_words": local,
+                              "migration_words": mig, "steal_words": steal,
+                              "recovery_words": rec, "stolen_tasks": stolen}
+            # elastic-subsystem counters: the buffer sessions share one
+            # ElasticityManager (Orchestrator.fork), so dedupe by identity
+            managers = {id(e): e for e in
+                        (getattr(s, "elastic", None) for s in sessions)
+                        if e is not None}
+            if managers:
+                elastic: Dict[str, int] = {}
+                for e in managers.values():
+                    for k, v in e.counters().items():
+                        if k == "machines_alive":
+                            elastic[k] = min(elastic.get(k, v), v)
+                        else:
+                            elastic[k] = elastic.get(k, 0) + v
+                out["elastic"] = elastic
         return out

@@ -1,0 +1,163 @@
+"""Direct unit tests for checkpoint/manager.py: atomic commit (a torn write
+can never restore), integrity hashing, bf16 round-trips, retention, and the
+elastic-restore path stage-boundary recovery (core/elasticity.py) drives —
+a checkpoint written on one fleet restoring onto a smaller one."""
+import os
+import pathlib
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import (CheckpointManager, latest_step,
+                                      restore_checkpoint, save_checkpoint)
+
+
+def _tree(seed=0):
+    r = np.random.default_rng(seed)
+    return {"values": r.standard_normal((32, 4)),
+            "home": r.integers(0, 8, size=32).astype(np.int64)}
+
+
+# ---------------------------------------------------------------------------
+# atomic commit / torn writes
+# ---------------------------------------------------------------------------
+class TestAtomicCommit:
+    def test_save_restore_round_trip(self, tmp_path):
+        tree = _tree()
+        path = save_checkpoint(str(tmp_path), 3, tree, extra={"stage": 3})
+        out, manifest = restore_checkpoint(path, like=_tree(seed=1))
+        assert manifest["step"] == 3
+        assert manifest["extra"] == {"stage": 3}
+        np.testing.assert_array_equal(out["values"], tree["values"])
+        np.testing.assert_array_equal(out["home"], tree["home"])
+
+    def test_torn_write_is_never_a_checkpoint(self, tmp_path):
+        # a writer that died mid-save leaves only the .tmp directory — the
+        # atomic rename never happened, so no checkpoint exists
+        tmp = tmp_path / "step_00000005.tmp"
+        tmp.mkdir()
+        (tmp / "arrays.npz").write_bytes(b"partial garbage")
+        assert latest_step(str(tmp_path)) is None
+        mgr = CheckpointManager(str(tmp_path))
+        assert mgr.restore_latest(like=_tree()) is None
+
+    def test_corrupted_payload_fails_integrity_check(self, tmp_path):
+        path = save_checkpoint(str(tmp_path), 1, _tree())
+        npz = pathlib.Path(path) / "arrays.npz"
+        data = bytearray(npz.read_bytes())
+        data[len(data) // 2] ^= 0xFF
+        npz.write_bytes(bytes(data))
+        with pytest.raises(IOError, match="integrity"):
+            restore_checkpoint(path, like=_tree())
+
+    def test_recommit_replaces_previous_step(self, tmp_path):
+        save_checkpoint(str(tmp_path), 2, _tree(seed=0))
+        t2 = _tree(seed=9)
+        path = save_checkpoint(str(tmp_path), 2, t2)
+        out, _ = restore_checkpoint(path, like=_tree())
+        np.testing.assert_array_equal(out["values"], t2["values"])
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        path = save_checkpoint(str(tmp_path), 0, {"v": np.zeros((4, 2))})
+        with pytest.raises(ValueError, match="shape mismatch"):
+            restore_checkpoint(path, like={"v": np.zeros((5, 2))})
+
+
+# ---------------------------------------------------------------------------
+# bf16 round-trip
+# ---------------------------------------------------------------------------
+def test_bf16_round_trip_is_bit_exact(tmp_path):
+    r = np.random.default_rng(3)
+    vals = jnp.asarray(r.standard_normal((16, 8)), dtype=jnp.bfloat16)
+    tree = {"w": vals, "b": np.arange(5, dtype=np.float64)}
+    path = save_checkpoint(str(tmp_path), 0, tree)
+    out, _ = restore_checkpoint(
+        path, like={"w": np.zeros((16, 8), dtype=jnp.bfloat16),
+                    "b": np.zeros(5)})
+    assert out["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(out["w"]).view(np.uint16),
+                                  np.asarray(vals).view(np.uint16))
+    np.testing.assert_array_equal(out["b"], tree["b"])
+
+
+# ---------------------------------------------------------------------------
+# manager: async saves, retention, latest
+# ---------------------------------------------------------------------------
+class TestManager:
+    def test_save_async_then_restore_latest(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        trees = {s: _tree(seed=s) for s in (0, 1, 2)}
+        for s in (0, 1, 2):
+            mgr.save_async(s, trees[s])
+        restored = mgr.restore_latest(like=_tree())
+        assert restored is not None
+        step, tree, manifest = restored
+        assert step == 2 and manifest["step"] == 2
+        np.testing.assert_array_equal(tree["values"], trees[2]["values"])
+
+    def test_retention_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in range(5):
+            mgr.save_async(s, _tree(seed=s))
+        mgr.wait()
+        kept = sorted(n for n in os.listdir(tmp_path)
+                      if n.startswith("step_"))
+        assert kept == ["step_00000003", "step_00000004"]
+
+    def test_snapshot_taken_before_async_write(self, tmp_path):
+        # save_async must copy the tree synchronously: mutations after the
+        # call cannot leak into the checkpoint
+        mgr = CheckpointManager(str(tmp_path))
+        tree = _tree()
+        want = tree["values"].copy()
+        mgr.save_async(0, tree)
+        tree["values"][:] = -1.0
+        mgr.wait()
+        out, _ = restore_checkpoint(mgr.path_for(0), like=_tree())
+        np.testing.assert_array_equal(out["values"], want)
+
+
+# ---------------------------------------------------------------------------
+# elastic restore: checkpoint written on P machines recovers onto fewer
+# ---------------------------------------------------------------------------
+def test_elastic_restore_onto_smaller_fleet(tmp_path):
+    """Durable-checkpoint shrink recovery: a mid-run machine death restores
+    the lost chunks from disk and re-homes them onto the survivors, with
+    values bit-identical to an uninterrupted run."""
+    from repro.core import DataStore, Orchestrator, TaskBatch
+
+    K, P, n = 128, 8, 256
+
+    def mk_store():
+        st = DataStore.create(K, P, value_width=2, chunk_words=4, salt=11)
+        st.write_rows(np.arange(K),
+                      np.random.default_rng(5).standard_normal((K, 2)))
+        return st
+
+    def batch(i):
+        r = np.random.default_rng(200 + i)
+        keys = r.integers(0, K, size=n)
+        return TaskBatch(contexts=r.standard_normal((n, 1)), read_keys=keys,
+                         write_keys=keys.copy(),
+                         origin=r.integers(0, P, size=n))
+
+    def f(ctx, vals):
+        return {"update": vals * 0.25 + ctx[:, :1]}
+
+    st_ref = mk_store()
+    ref = Orchestrator(st_ref)
+    st = mk_store()
+    sess = Orchestrator(st, elasticity={"recovery": {
+        "injector": {3: [1, 6]}, "on_failure": "shrink",
+        "directory": str(tmp_path)}})
+    for i in range(6):
+        ref.run_stage(batch(i), f)
+        sess.run_stage(batch(i), f)
+    np.testing.assert_array_equal(st.values, st_ref.values)
+    # every lost chunk re-homed onto a survivor; the fleet really shrank
+    assert not np.isin(st.home, [1, 6]).any()
+    assert sess.elastic.counters()["machines_alive"] == P - 2
+    # the durable snapshots exist on disk (atomically committed)
+    assert latest_step(str(tmp_path)) is not None

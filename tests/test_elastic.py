@@ -1,0 +1,407 @@
+"""Elastic sessions pinned end to end: the unified `SessionConfig` front
+door, live chunk migration, Phase-3 work stealing, and stage-boundary
+failure recovery (core/config.py + core/elasticity.py).
+
+The load-bearing contracts:
+
+* every front door (`Orchestrator`, `orchestration()`, `GraphSession`,
+  `DistributedHashTable`, `serve.Frontend`) resolves `config=` and the
+  legacy kwargs through ONE alias table — `replicate=`/`replication=`
+  cannot drift, and contradictions raise instead of silently winning;
+* elasticity never changes *values*: migration and stealing only move
+  placement/execution, so stores stay bit-identical to inelastic runs;
+* restart-mode recovery replays from the last stage boundary such that
+  final values AND per-phase cost signatures are bit-identical to an
+  uninterrupted run (modulo the ignorable elastic phases);
+* cost reports stay bit-identical across numpy/jax backends with
+  elasticity on (the simulation-fidelity contract extends to the new
+  phases).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (ELASTIC_PHASES, DataStore, ElasticityConfig,
+                        MigrationConfig, Orchestrator, RecoveryConfig,
+                        SessionConfig, StealConfig, TaskBatch, orchestration,
+                        assert_session_parity, resolve_session_config)
+
+K, P, N = 192, 8, 384
+
+
+def mk_store(salt=3, seed=42):
+    st = DataStore.create(K, P, value_width=2, chunk_words=4, salt=salt)
+    st.write_rows(np.arange(K),
+                  np.random.default_rng(seed).standard_normal((K, 2)))
+    return st
+
+
+def batch(i, skew=False):
+    r = np.random.default_rng(1000 + i)
+    if skew:  # hot head: most demand lands on a handful of homes
+        keys = r.zipf(1.4, size=N) % K
+    else:
+        keys = r.integers(0, K, size=N)
+    return TaskBatch(contexts=r.standard_normal((N, 1)),
+                     read_keys=keys.astype(np.int64),
+                     write_keys=keys.astype(np.int64).copy(),
+                     origin=r.integers(0, P, size=N))
+
+
+def muladd(ctx, vals):
+    return {"update": vals * 0.5 + ctx[:, :1]}
+
+
+def drive(sess, stages=8, skew=False):
+    for i in range(stages):
+        sess.run_stage(batch(i, skew=skew), muladd)
+    return sess
+
+
+# ---------------------------------------------------------------------------
+# SessionConfig resolution + front-door uniformity
+# ---------------------------------------------------------------------------
+class TestSessionConfig:
+    def test_kwarg_and_config_spellings_agree(self):
+        a = Orchestrator(mk_store(), engine="push", replication=True)
+        b = Orchestrator(mk_store(), config=SessionConfig(
+            engine="push", replication=True))
+        assert a.config == b.config
+        assert a.engine_name == b.engine_name == "push"
+        assert a.replicator is not None and b.replicator is not None
+
+    def test_replicate_and_replication_are_one_field(self):
+        cfg = resolve_session_config(replicate={"num_hot": 4})
+        assert cfg.replication == {"num_hot": 4}
+        with pytest.raises(ValueError, match="conflicting spellings"):
+            resolve_session_config(replicate=True, replication={"num_hot": 4})
+        # same value through both spellings is fine
+        cfg = resolve_session_config(replicate=True, replication=True)
+        assert cfg.replication is True
+
+    def test_kwarg_contradicting_config_raises(self):
+        with pytest.raises(ValueError, match="set it in one place"):
+            resolve_session_config(SessionConfig(engine="push"),
+                                   engine="pull")
+        # agreeing kwarg is allowed
+        cfg = resolve_session_config(SessionConfig(engine="push"),
+                                     engine="push")
+        assert cfg.engine == "push"
+
+    def test_unknown_kwarg_raises(self):
+        with pytest.raises(TypeError, match="unknown session option"):
+            resolve_session_config(replicas=True)
+
+    def test_dict_config_accepted(self):
+        sess = Orchestrator(mk_store(), config={"engine": "pull"})
+        assert sess.engine_name == "pull"
+
+    def test_engine_opts_merge(self):
+        cfg = resolve_session_config(SessionConfig(engine_opts={"C": 4}),
+                                     engine_opts={"work_per_task": 2.0})
+        assert cfg.engine_opts == {"C": 4, "work_per_task": 2.0}
+
+    def test_orchestration_takes_config(self):
+        st = mk_store()
+        res = orchestration(batch(0), muladd, st,
+                            config=SessionConfig(engine="push"))
+        assert res.report is not None
+
+    def test_hashtable_session_cache_unifies_spellings(self):
+        from repro.kvstore import DistributedHashTable
+        ht = DistributedHashTable(64, 4, value_width=2)
+        s1 = ht.session(engine="tdorch", replicate=True)
+        s2 = ht.session(config=SessionConfig(replication=True))
+        assert s1 is s2  # one resolved config, one cached session
+
+    def test_graph_session_takes_config_but_rejects_elasticity(self):
+        from repro.graph import GraphSession, erdos_renyi, ingest
+        og = ingest(erdos_renyi(64, avg_degree=4, seed=2), P=4, seed=0)
+        gs = GraphSession(og, config=SessionConfig(replication=True))
+        assert gs.replicator is not None
+        with pytest.raises(ValueError, match="elasticity"):
+            GraphSession(og, config=SessionConfig(
+                elasticity=ElasticityConfig(stealing=True)))
+
+    def test_frontend_builds_session_from_config(self):
+        from repro.serve import Frontend
+        st = mk_store()
+        fe = Frontend(st, session_config=SessionConfig(engine="push"),
+                      mode="sync", double_buffer=False)
+        assert fe.sessions[0].engine_name == "push"
+        fe.close()
+        sess = Orchestrator(mk_store())
+        with pytest.raises(ValueError, match="session_config"):
+            Frontend(sess, session_config=SessionConfig(engine="push"))
+
+    def test_prebuilt_engine_with_backend_in_config_raises(self):
+        st = mk_store()
+        eng = Orchestrator(st).engine
+        with pytest.raises(ValueError, match="prebuilt engine"):
+            Orchestrator(st, engine=eng, backend="jax")
+
+
+# ---------------------------------------------------------------------------
+# live chunk migration
+# ---------------------------------------------------------------------------
+class TestMigration:
+    ELASTIC = {"migration": {"refresh": 2, "min_count": 4.0}}
+
+    @pytest.mark.parametrize("engine", ["tdorch", "push"])
+    def test_values_bit_identical_to_inelastic(self, engine):
+        plain = drive(Orchestrator(mk_store(), engine=engine), skew=True)
+        elastic = drive(Orchestrator(mk_store(), engine=engine,
+                                     elasticity=self.ELASTIC), skew=True)
+        np.testing.assert_array_equal(plain.store.values,
+                                      elastic.store.values)
+        assert elastic.elastic.counters()["migrations"] > 0
+        assert elastic.report.migration_words > 0
+        # inelastic routing really changed: some chunk lives elsewhere now
+        assert (plain.store.home != elastic.store.home).any()
+
+    def test_deterministic_elections(self):
+        runs = []
+        for _ in range(2):
+            sess = drive(Orchestrator(mk_store(),
+                                      elasticity=self.ELASTIC), skew=True)
+            runs.append((list(sess.elastic.planner.moves),
+                         sess.report.migration_words,
+                         sess.store.home.copy()))
+        assert runs[0][0] == runs[1][0]
+        assert runs[0][1] == runs[1][1]
+        np.testing.assert_array_equal(runs[0][2], runs[1][2])
+
+    def test_moves_follow_dominant_origin(self):
+        st = mk_store()
+        sess = Orchestrator(st, elasticity={"migration": {
+            "refresh": 1, "min_count": 4.0, "affinity": 0.5}})
+        hot, requester = 7, int((st.home[7] + 1) % P)
+        keys = np.full(N, hot, dtype=np.int64)
+        tasks = TaskBatch(contexts=np.zeros((N, 1)), read_keys=keys,
+                          write_keys=np.full(N, -1, dtype=np.int64),
+                          origin=np.full(N, requester, dtype=np.int64))
+        sess.run_stage(tasks, lambda c, v: {"result": v},
+                       return_results=True)
+        sess.run_stage(tasks, lambda c, v: {"result": v},
+                       return_results=True)
+        # 100% of the demand came from `requester`: the chunk moved there
+        assert int(st.home[hot]) == requester
+        assert (hot, (requester + P - 1) % P, requester) in \
+            sess.elastic.planner.moves
+
+    def test_jax_backend_routes_and_matches_after_migration(self):
+        oracle = drive(Orchestrator(mk_store()), skew=True)
+        jaxed = drive(Orchestrator(mk_store(), backend="jax",
+                                   elasticity=self.ELASTIC), skew=True)
+        jaxed.backend.sync(jaxed.store)
+        np.testing.assert_allclose(jaxed.store.values, oracle.store.values,
+                                   rtol=1e-5, atol=1e-6)
+        assert jaxed.elastic.counters()["migrations"] > 0
+
+    def test_cost_parity_across_backends_with_migration(self):
+        a = drive(Orchestrator(mk_store(), elasticity=self.ELASTIC),
+                  skew=True)
+        b = drive(Orchestrator(mk_store(), backend="jax",
+                               elasticity=self.ELASTIC), skew=True)
+        assert_session_parity(a.report, b.report)  # elastic phases included
+
+    def test_rehome_validates_targets(self):
+        st = mk_store()
+        with pytest.raises(ValueError, match="machine ids"):
+            st.rehome(np.array([0]), np.array([P]))
+
+
+# ---------------------------------------------------------------------------
+# Phase-3 work stealing
+# ---------------------------------------------------------------------------
+class TestStealing:
+    ELASTIC = {"stealing": {"threshold": 1.05, "min_tasks": 8}}
+
+    @pytest.mark.parametrize("engine", ["tdorch", "push"])
+    def test_values_identical_and_steals_accounted(self, engine):
+        plain = drive(Orchestrator(mk_store(), engine=engine), skew=True)
+        stealing = drive(Orchestrator(mk_store(), engine=engine,
+                                      elasticity=self.ELASTIC), skew=True)
+        np.testing.assert_array_equal(plain.store.values,
+                                      stealing.store.values)
+        pm = stealing.report.per_machine()
+        stolen = int(pm["stolen_in"].sum())
+        assert stolen > 0
+        assert stolen == int(pm["stolen_out"].sum())
+        assert stolen == stealing.elastic.counters()["stolen_tasks"]
+        assert stealing.report.steal_words > 0
+
+    @pytest.mark.parametrize("engine", ["tdorch", "push"])
+    def test_stealing_flattens_exec_site_histogram(self, engine):
+        def peak(elasticity):
+            sess = Orchestrator(mk_store(), engine=engine,
+                                elasticity=elasticity)
+            peaks = []
+            for i in range(6):
+                res = sess.run_stage(batch(i, skew=True), muladd)
+                peaks.append(int(np.bincount(res.exec_site,
+                                             minlength=P).max()))
+            return peaks
+        without, with_steal = peak(None), peak(self.ELASTIC)
+        assert sum(with_steal) < sum(without)
+        assert all(w <= p for w, p in zip(with_steal, without))
+
+    @pytest.mark.parametrize("engine", ["pull", "sort"])
+    def test_unsupported_engines_run_unchanged(self, engine):
+        # pull executes at origins, sort is balanced by construction: the
+        # session quietly skips the stealer rather than mis-charging
+        plain = drive(Orchestrator(mk_store(), engine=engine), stages=4)
+        stealing = drive(Orchestrator(mk_store(), engine=engine,
+                                      elasticity=self.ELASTIC), stages=4)
+        np.testing.assert_array_equal(plain.store.values,
+                                      stealing.store.values)
+        assert stealing.report.steal_words == 0
+        assert_session_parity(plain.report, stealing.report)
+
+    def test_cost_parity_across_backends_with_stealing(self):
+        a = drive(Orchestrator(mk_store(), elasticity=self.ELASTIC),
+                  skew=True)
+        b = drive(Orchestrator(mk_store(), backend="jax",
+                               elasticity=self.ELASTIC), skew=True)
+        assert_session_parity(a.report, b.report)
+
+    def test_straggler_detector_drains_flagged_machine(self):
+        from repro.runtime.failures import StragglerDetector
+        det = StragglerDetector(threshold=1.5, min_samples=1)
+        for m in range(P):
+            det.record(m, 10.0 if m == 2 else 1.0)
+        assert det.stragglers() == [2]
+        sess = Orchestrator(mk_store(), elasticity=ElasticityConfig(
+            stealing=StealConfig(threshold=1.25, min_tasks=8,
+                                 detector=det)))
+        res = sess.run_stage(batch(0), muladd)
+        assert int(np.bincount(res.exec_site, minlength=P)[2]) == 0
+
+
+# ---------------------------------------------------------------------------
+# stage-boundary failure recovery
+# ---------------------------------------------------------------------------
+class TestRecovery:
+    def _compare_restart(self, elasticity, stages=8):
+        plain = drive(Orchestrator(mk_store()), stages=stages)
+        rec = drive(Orchestrator(mk_store(), elasticity=elasticity),
+                    stages=stages)
+        np.testing.assert_array_equal(plain.store.values, rec.store.values)
+        assert_session_parity(plain.report, rec.report,
+                              ignore=ELASTIC_PHASES)
+        return rec
+
+    def test_restart_is_bit_identical_to_uninterrupted(self):
+        rec = self._compare_restart({"recovery": {"injector": {4: [2]}}})
+        c = rec.elastic.counters()
+        assert c["recoveries"] == 1 and c["chunks_restored"] > 0
+        assert c["machines_alive"] == P  # restart: replaced in place
+        assert rec.report.recovery_words > 0
+
+    def test_restart_with_write_log_between_snapshots(self):
+        # checkpoint_every=3: the boundary is snapshot + write-log replay
+        rec = self._compare_restart({"recovery": {
+            "injector": {5: [0, 3]}, "checkpoint_every": 3}})
+        assert rec.elastic.counters()["recoveries"] == 2
+
+    def test_restart_with_durable_checkpoints(self, tmp_path):
+        self._compare_restart({"recovery": {
+            "injector": {4: [6]}, "directory": str(tmp_path),
+            "checkpoint_every": 2}})
+
+    def test_heartbeat_driven_recovery(self):
+        from repro.runtime.failures import HeartbeatMonitor
+        t = [0.0]
+        mon = HeartbeatMonitor(list(range(P)), timeout=5.0,
+                               clock=lambda: t[0])
+        plain = drive(Orchestrator(mk_store()), stages=6)
+        st = mk_store()
+        sess = Orchestrator(st, elasticity=ElasticityConfig(
+            recovery=RecoveryConfig(monitor=mon)))
+        for i in range(6):
+            if i == 3:
+                t[0] = 6.0  # node silence crosses the timeout
+                for m in range(P):
+                    if m != 5:
+                        mon.beat(m)
+            sess.run_stage(batch(i), muladd)
+        np.testing.assert_array_equal(plain.store.values, st.values)
+        assert sess.elastic.counters()["recoveries"] == 1
+
+    def test_shrink_drains_the_dead_machine(self):
+        plain = drive(Orchestrator(mk_store()), stages=8)
+        st = mk_store()
+        sess = drive(Orchestrator(st, elasticity={"recovery": {
+            "injector": {3: [2]}, "on_failure": "shrink"}}), stages=8)
+        np.testing.assert_array_equal(plain.store.values, st.values)
+        assert not (st.home == 2).any()  # chunks re-homed off the corpse
+        c = sess.elastic.counters()
+        assert c["machines_alive"] == P - 1
+        assert c["stolen_tasks"] > 0  # auto-enabled stealing drained it
+        # post-shrink stages never execute on the dead machine
+        res = sess.run_stage(batch(99), muladd)
+        assert int(np.bincount(res.exec_site, minlength=P)[2]) == 0
+
+    def test_mid_plan_kill_replays_from_stage_boundary(self):
+        """A machine killed mid-StagePlan: the plan's remaining rounds
+        replay from the boundary, final values and per-phase signatures
+        bit-identical to the uninterrupted numpy-oracle plan."""
+        from repro.kvstore import DistributedHashTable
+
+        def chain(table, **kw):
+            r = np.random.default_rng(17)
+            keys = r.integers(0, 64, size=(40, 6))
+            operand = np.stack([np.full(40, 0.5), r.standard_normal(40)],
+                               axis=1)
+            return table.run_chain(keys, operand, **kw)
+
+        ht_plain = DistributedHashTable(64, P, value_width=2, seed=1)
+        out_plain = chain(ht_plain)
+        ht_kill = DistributedHashTable(64, P, value_width=2, seed=1)
+        out_kill = chain(ht_kill, config=SessionConfig(
+            elasticity=ElasticityConfig(
+                recovery=RecoveryConfig(injector={3: [4]}))))
+        np.testing.assert_array_equal(out_plain.values, out_kill.values)
+        np.testing.assert_array_equal(ht_plain.values, ht_kill.values)
+        for a, b in zip(out_plain.reports, out_kill.reports):
+            from repro.core import assert_cost_parity
+            assert_cost_parity(a, b, ignore=ELASTIC_PHASES)
+
+    def test_replica_holders_donate_during_recovery(self):
+        # with replication on, lost hot chunks re-derive from a surviving
+        # holder (in-mesh send) instead of checkpoint ingress
+        sess = Orchestrator(mk_store(), replication={
+            "num_hot": 16, "refresh": 2, "min_count": 4.0},
+            elasticity={"recovery": {"injector": {5: [1]}}})
+        drive(sess, stages=8, skew=True)
+        rec_phases = [ph for st in sess.report.stages for ph in st.phases
+                      if ph.name == "recovery"]
+        assert rec_phases and any(ph.sent.sum() > 0 for ph in rec_phases)
+
+    def test_bad_on_failure_mode_rejected(self):
+        with pytest.raises(ValueError, match="restart.*shrink|shrink.*restart"):
+            RecoveryConfig(on_failure="panic")
+
+
+# ---------------------------------------------------------------------------
+# chaos conformance: seeded kill mid-run on the 8-device mesh
+# ---------------------------------------------------------------------------
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs an 8-device mesh "
+                           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+class TestChaosSharded:
+    def test_spmd_recovery_matches_oracle(self):
+        elastic = {"recovery": {"injector": {4: [3]}},
+                   "migration": {"refresh": 3, "min_count": 4.0}}
+        oracle = drive(Orchestrator(mk_store(), elasticity=elastic),
+                       skew=True)
+        spmd = drive(Orchestrator(mk_store(), backend="jax_spmd",
+                                  elasticity=elastic), skew=True)
+        spmd.backend.sync(spmd.store)
+        np.testing.assert_allclose(spmd.store.values, oracle.store.values,
+                                   rtol=2e-4, atol=1e-5)
+        # the cost model is simulated identically on both backends — the
+        # elastic phases included, bit for bit
+        assert_session_parity(oracle.report, spmd.report)
+        assert spmd.elastic.counters()["recoveries"] == 1

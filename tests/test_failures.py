@@ -1,0 +1,137 @@
+"""Direct unit tests for the simulated hardware layer (runtime/failures.py):
+the failure injector's schedule determinism, the heartbeat monitor's strict
+timeout edge, and the straggler detector's min-samples gate. These primitives
+drive stage-boundary recovery and Phase-3 stealing (core/elasticity.py), so
+their exact semantics are pinned here, independent of any session."""
+import numpy as np
+
+from repro.runtime.failures import (FailureInjector, HeartbeatMonitor,
+                                    StragglerDetector)
+
+
+# ---------------------------------------------------------------------------
+# FailureInjector
+# ---------------------------------------------------------------------------
+class TestFailureInjector:
+    def test_schedule_fires_at_exact_steps(self):
+        inj = FailureInjector(schedule={2: [1], 5: [0, 3]})
+        assert inj.tick(0) == []
+        assert inj.tick(1) == []
+        assert inj.tick(2) == [1]
+        assert inj.tick(3) == []
+        assert inj.tick(4) == []
+        assert sorted(inj.tick(5)) == [0, 3]
+        assert inj.dead == {0, 1, 3}
+
+    def test_deterministic_across_instances(self):
+        sched = {1: [2], 3: [2, 5], 7: [0]}
+        runs = []
+        for _ in range(2):
+            inj = FailureInjector(schedule=dict(sched))
+            runs.append([inj.tick(s) for s in range(10)])
+        assert runs[0] == runs[1]
+
+    def test_already_dead_nodes_do_not_die_twice(self):
+        inj = FailureInjector(schedule={1: [4], 3: [4, 6]})
+        assert inj.tick(1) == [4]
+        # node 4 is already dead at step 3: only the fresh death reports
+        assert inj.tick(3) == [6]
+        assert inj.dead == {4, 6}
+
+    def test_pre_dead_set_respected(self):
+        inj = FailureInjector(schedule={0: [1, 2]}, dead={1})
+        assert inj.tick(0) == [2]
+
+    def test_skipped_steps_do_not_fire(self):
+        # the injector is step-addressed, not cumulative: jumping past a
+        # scheduled step never fires it (stages are the only clock)
+        inj = FailureInjector(schedule={2: [1]})
+        assert inj.tick(3) == []
+        assert inj.dead == set()
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor
+# ---------------------------------------------------------------------------
+class TestHeartbeatMonitor:
+    def test_timeout_edge_is_strict(self):
+        t = [0.0]
+        mon = HeartbeatMonitor([0, 1], timeout=10.0, clock=lambda: t[0])
+        # exactly at the timeout: NOT failed (strict >)
+        t[0] = 10.0
+        assert mon.failed_nodes() == []
+        # one tick past: failed
+        t[0] = 10.0 + 1e-9
+        assert mon.failed_nodes() == [0, 1]
+
+    def test_beat_resets_the_clock(self):
+        t = [0.0]
+        mon = HeartbeatMonitor([0, 1], timeout=5.0, clock=lambda: t[0])
+        t[0] = 4.0
+        mon.beat(1)
+        t[0] = 7.0  # node 0 silent for 7s, node 1 for 3s
+        assert mon.failed_nodes() == [0]
+
+    def test_explicit_at_and_now(self):
+        mon = HeartbeatMonitor([3], timeout=2.0, clock=lambda: 0.0)
+        mon.beat(3, at=100.0)
+        assert mon.failed_nodes(now=102.0) == []
+        assert mon.failed_nodes(now=102.5) == [3]
+
+
+# ---------------------------------------------------------------------------
+# StragglerDetector
+# ---------------------------------------------------------------------------
+class TestStragglerDetector:
+    def test_min_samples_gate(self):
+        det = StragglerDetector(threshold=1.5, min_samples=4)
+        for n in (0, 2):
+            for _ in range(4):
+                det.record(n, 1.0)
+        for _ in range(3):  # node 1 one sample short of the gate
+            det.record(1, 100.0)
+        # node 1 has no qualifying mean yet: transient slowness (fewer than
+        # min_samples observations) never reports
+        assert det.stragglers() == []
+        det.record(1, 100.0)
+        assert det.stragglers() == [1]
+
+    def test_needs_two_qualifying_nodes(self):
+        det = StragglerDetector(min_samples=2)
+        det.record(5, 50.0)
+        det.record(5, 50.0)
+        assert det.stragglers() == []  # no fleet to compare against
+
+    def test_threshold_relative_to_median(self):
+        det = StragglerDetector(threshold=2.0, min_samples=1)
+        for n, d in [(0, 1.0), (1, 1.0), (2, 1.9)]:
+            det.record(n, d)
+        assert det.stragglers() == []  # 1.9 <= 2.0 * median(1.0)
+        det = StragglerDetector(threshold=2.0, min_samples=1)
+        for n, d in [(0, 1.0), (1, 1.0), (2, 2.1)]:
+            det.record(n, d)
+        assert det.stragglers() == [2]
+
+    def test_window_forgets_old_samples(self):
+        det = StragglerDetector(window=4, threshold=1.5, min_samples=4)
+        for n in (0, 2):
+            for _ in range(4):
+                det.record(n, 1.0)
+        for _ in range(4):
+            det.record(1, 10.0)
+        assert det.stragglers() == [1]
+        for _ in range(4):  # node 1 recovers; old slow samples roll out
+            det.record(1, 1.0)
+        assert det.stragglers() == []
+
+    def test_deterministic(self):
+        r = np.random.default_rng(7)
+        durs = r.uniform(0.5, 2.0, size=(3, 16))
+        outs = []
+        for _ in range(2):
+            det = StragglerDetector(window=8, threshold=1.2, min_samples=4)
+            for n in range(3):
+                for d in durs[n]:
+                    det.record(n, float(d))
+            outs.append(det.stragglers())
+        assert outs[0] == outs[1]
