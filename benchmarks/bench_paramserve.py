@@ -1,0 +1,187 @@
+"""Parameter-server serving tier: orchestrated MoE dispatch + embedding
+serving vs their naive baselines (the ISSUE-9 headline gate).
+
+MoE arms share identical Zipf-α=1.2 routed traffic on an 8-shard mesh:
+
+* ``paramserve/moe/orchestrated``  — `MoERouter.decode_step` with hot-expert
+  replication; steady-state per-machine FFN work_ratio (Definition 1),
+  measured after the first (cold-directory) stage.
+* ``paramserve/moe/no_replication`` — same session minus the directory:
+  what Phase-3 work stealing buys on its own.
+* ``paramserve/moe/naive_all_to_all`` — the `models/moe._dispatch_local`
+  transplant: every assignment runs at its expert's home shard, so
+  per-machine work *is* expert demand.
+
+The suite asserts the headline itself (a dispatcher regression fails the
+bench run, not just the JSON diff): orchestrated ≤ 1.5 while naive exceeds
+it ≥ 2×; the ``paramserve/moe/balance`` summary row carries the
+deterministic ``balance_speedup`` = naive/orchestrated ratio.
+
+Embedding arms (``paramserve/embed/*``) run the same stationary-Zipf lookup
+stream with and without hot-row replication: the replicated arm's wire
+``words_per_task`` must stay below the cold arm's (hot rows are served
+replica-locally and never billed as traffic).
+
+``paramserve/model/<skew>/<kind>`` absorbs the retired `bench_moe` rows —
+the model-level (jit, single-host) dispatch comparison of
+`core.spmd.moe_push_pull` vs push/pull at fixed capacity, with dropped
+assignments as the deterministic quality metric.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kvstore import zipf_keys_stationary
+from repro.paramserve import EmbeddingStore, MoERouter
+
+from .common import row, timeit
+
+P = 8
+ALPHA = 1.2
+SEED = 13
+REPLICATE = {"num_hot": 4, "refresh": 1, "decay": 0.5, "min_count": 2.0}
+
+
+def _moe_arms(quick: bool):
+    E, d, f, k = (16, 8, 16, 2) if quick else (16, 32, 64, 2)
+    T, stages = (256, 4) if quick else (512, 6)
+
+    def drive(replicate):
+        r = MoERouter(E, d, f, P, top_k=k, seed=0)
+        r.init_weights(1)
+        # stationary expert popularity across stages — a trained MoE's hot
+        # experts persist between decode steps (the zipf_keys_stationary
+        # convention); per-seed re-permutation is the elastic suite's regime
+        perm = np.random.default_rng(SEED).permutation(E)
+        naive, warm = 0.0, None
+        for s in range(stages):
+            x, ti, g = r.zipf_routing(T, alpha=ALPHA, seed=SEED + s,
+                                      rank_perm=perm)
+            r.decode_step(x, ti, g, replicate=replicate)
+            naive = max(naive, r.naive_dispatch(x, ti, g).work_ratio)
+            if s == 0:
+                warm = r.session(replicate=replicate).report.per_machine()[
+                    "work"].copy()
+        work = r.session(replicate=replicate).report.per_machine()["work"] \
+            - warm
+        ratio = float(work.max() / work.mean())
+        # wall: one steady-state decode step, lambda caches warm
+        x, ti, g = r.zipf_routing(T, alpha=ALPHA, seed=SEED + stages,
+                                  rank_perm=perm)
+        wall = timeit(lambda: r.decode_step(x, ti, g, replicate=replicate),
+                      repeats=3, warmup=1)
+        return ratio, naive, wall
+
+    orch, naive, wall_on = drive(REPLICATE)
+    steal_only, _, wall_off = drive(None)
+    rows = [
+        row("paramserve/moe/orchestrated", wall_on * 1e6,
+            f"work_ratio={orch:.3f};P={P};alpha={ALPHA}",
+            seed=SEED, work_ratio=orch, wall_ms=wall_on * 1e3),
+        row("paramserve/moe/no_replication", wall_off * 1e6,
+            f"work_ratio={steal_only:.3f} (stealing only)",
+            seed=SEED, work_ratio=steal_only, wall_ms=wall_off * 1e3),
+        row("paramserve/moe/naive_all_to_all", 0.0,
+            f"work_ratio={naive:.3f} (worst stage; work = expert demand)",
+            seed=SEED, work_ratio=naive),
+    ]
+    assert orch <= 1.5, (
+        f"orchestrated dispatch lost Definition 1: work_ratio {orch:.2f} "
+        f"> 1.5 at alpha={ALPHA}, P={P}")
+    assert naive >= 2.0 * orch, (
+        f"naive all-to-all arm unexpectedly balanced ({naive:.2f} vs "
+        f"orchestrated {orch:.2f}) — the skew is not exercising dispatch")
+    rows.append(row(
+        "paramserve/moe/balance", 0.0,
+        f"naive/orchestrated={naive / orch:.2f}x (gate: orch<=1.5, "
+        f"naive>=2x)", seed=SEED, balance_speedup=naive / orch))
+    return rows
+
+
+def _embed_arms(quick: bool):
+    V, dim = (512, 16) if quick else (4096, 64)
+    T, stages = (2048, 4) if quick else (8192, 4)
+
+    def drive(replicate):
+        es = EmbeddingStore(V, dim, P, seed=0)
+        es.init_table(1)
+        rng = np.random.default_rng(SEED)
+        perm = rng.permutation(V)
+        for _ in range(stages):
+            ids = zipf_keys_stationary(T, V, ALPHA, rng, perm)
+            es.lookup(ids, replicate=replicate)
+        rep = es.session(replicate=replicate).report
+        wpt = float(rep.sent.sum()) / (stages * T)
+        ids = zipf_keys_stationary(T, V, ALPHA, rng, perm)
+        wall = timeit(lambda: es.lookup(ids, replicate=replicate),
+                      repeats=3, warmup=1)
+        return wpt, float(rep.replica_local_words), wall
+
+    hot_rep = dict(REPLICATE, num_hot=max(8, V // 64))
+    wpt_on, local_on, wall_on = drive(hot_rep)
+    wpt_off, _, wall_off = drive(None)
+    assert wpt_on < wpt_off, (
+        f"replicated lookups moved MORE wire words/task ({wpt_on:.2f} vs "
+        f"{wpt_off:.2f}) — the hot-row directory is not absorbing traffic")
+    return [
+        row("paramserve/embed/replicated", wall_on * 1e6,
+            f"words_per_task={wpt_on:.3f};replica_local_words={local_on:.0f}",
+            seed=SEED, words_per_task=wpt_on, wall_ms=wall_on * 1e3),
+        row("paramserve/embed/no_replication", wall_off * 1e6,
+            f"words_per_task={wpt_off:.3f}",
+            seed=SEED, words_per_task=wpt_off, wall_ms=wall_off * 1e3),
+    ]
+
+
+def _model_arms(quick: bool):
+    """The retired `bench_moe` rows: model-level jitted dispatch comparison
+    (capacity drops + wall) of the `core.spmd` MoE kernels."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.spmd import (MoEDispatchConfig, moe_direct_pull,
+                                 moe_direct_push, moe_push_pull,
+                                 moe_reference)
+
+    rng = np.random.default_rng(0)
+    T, d, f, E, k = (256, 64, 128, 16, 4) if quick else (2048, 128, 256, 32, 8)
+    x = jnp.asarray(rng.normal(size=(T, d)), jnp.float32)
+    w_in = jnp.asarray(rng.normal(size=(E, d, 2 * f)) * 0.05, jnp.float32)
+    w_out = jnp.asarray(rng.normal(size=(E, f, d)) * 0.05, jnp.float32)
+    rows = []
+    for skew, bias in [("uniform", 0.0), ("skewed", 4.0), ("extreme", 8.0)]:
+        logits = rng.normal(size=(T, E))
+        logits[:, 0] += bias  # expert 0 is hot
+        top = np.argsort(-logits, axis=1)[:, :k]
+        ti = jnp.asarray(top, jnp.int32)
+        tg = jnp.asarray(np.full((T, k), 1.0 / k), jnp.float32)
+        ref = moe_reference(x, ti, tg, w_in, w_out)
+        for kind, fn in [("tdorch", moe_push_pull),
+                         ("push", moe_direct_push),
+                         ("pull", moe_direct_pull)]:
+            cfg = MoEDispatchConfig(num_experts=E, top_k=k,
+                                    capacity_factor=1.25,
+                                    num_hot=4 if kind == "tdorch" else 0,
+                                    ep_size=1)
+            jfn = jax.jit(lambda *a, fn=fn, cfg=cfg: fn(*a, cfg))
+            y, aux = jfn(x, ti, tg, w_in, w_out)
+            wall = timeit(lambda: jax.block_until_ready(
+                jfn(x, ti, tg, w_in, w_out)[0]), repeats=3, warmup=1)
+            err = float(jnp.abs(y - ref).max())
+            rows.append(row(
+                f"paramserve/model/{skew}/{kind}", wall * 1e6,
+                f"dropped={int(aux.dropped_assignments)};"
+                f"max_err_vs_dense={err:.2e}",
+                seed=0, dropped=float(aux.dropped_assignments),
+                wall_ms=wall * 1e3))
+    return rows
+
+
+def run(quick: bool = False):
+    return _moe_arms(quick) + _embed_arms(quick) + _model_arms(quick)
+
+
+if __name__ == "__main__":
+    from .common import print_csv
+
+    print_csv(run())

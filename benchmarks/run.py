@@ -9,10 +9,11 @@
     (beyond) bench_backend    numpy-oracle vs jitted-jax execution backend
     (beyond) bench_plan       StagePlan-driven rounds vs per-stage run_stage
     (beyond) bench_spmd       mesh-sharded backend: shard-count load balance
-    (beyond) bench_moe        TD-Orch vs push/pull as the MoE dispatcher
     (beyond) bench_kernels    per-kernel microbenchmarks
     (beyond) bench_serve      streaming serve: adaptive batching + overlap
     (beyond) bench_elastic    live migration under a nonstationary hot-set shift
+    (beyond) bench_paramserve parameter-server tier: orchestrated MoE dispatch
+                              + embedding serving vs naive (absorbs bench_moe)
 
 Prints ``name,us_per_call,derived`` CSV. `--quick` shrinks sizes ~10×.
 `--json PATH` writes schema-versioned per-suite row files (fixed seeds, so
@@ -26,7 +27,7 @@ import sys
 import time
 
 from . import (bench_ablation, bench_backend, bench_breakdown, bench_elastic,
-               bench_graph, bench_kernels, bench_moe, bench_plan,
+               bench_graph, bench_kernels, bench_paramserve, bench_plan,
                bench_scaling, bench_serve, bench_skew, bench_spmd, bench_ycsb)
 from .common import print_csv, write_json
 
@@ -40,10 +41,10 @@ SUITES = {
     "scaling": bench_scaling,
     "breakdown": bench_breakdown,
     "ablation": bench_ablation,
-    "moe": bench_moe,
     "kernels": bench_kernels,
     "serve": bench_serve,
     "elastic": bench_elastic,
+    "paramserve": bench_paramserve,
 }
 
 

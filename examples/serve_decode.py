@@ -1,34 +1,83 @@
-"""Serving example: batched prefill + greedy decode with KV caches on a
-reduced tinyllama config; verifies decode matches teacher forcing.
+"""Serving example: open-loop MoE decode traffic through the parameter-server
+tier — `EmbeddingStore` lookups feed `MoERouter` expert-FFN decode steps,
+both front doors sharing one `SessionConfig` with hot-chunk replication.
 
-    PYTHONPATH=src python examples/serve_decode.py
+Routed tokens stream in one at a time (`serve.Frontend` coalesces them into
+ragged CSR decode batches); the Zipf-α=1.2 expert skew is where the naive
+all-to-all dispatch collapses and the orchestrated session holds
+Definition 1 — both work_ratios are printed.
+
+    PYTHONPATH=src python examples/serve_decode.py [--quick]
 """
+import argparse
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_reduced
-from repro.launch.serve import generate
-from repro.models import Model
+from repro.core import SessionConfig
+from repro.kvstore import zipf_keys_stationary
+from repro.paramserve import EmbeddingStore, MoERouter
 
-cfg = get_reduced("tinyllama-1.1b")
-model = Model(cfg, scan_layers=True)
-params = model.init(0)
+ap = argparse.ArgumentParser()
+ap.add_argument("--quick", action="store_true", help="CI-sized stream")
+ap.add_argument("--tokens", type=int, default=None)
+args = ap.parse_args()
 
-rng = np.random.default_rng(0)
-B, S, GEN = 4, 32, 48
-prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+E, d, f, P, k = (16, 16, 32, 8, 2) if args.quick else (32, 64, 128, 8, 2)
+V = 512 if args.quick else 4096
+T = args.tokens or (256 if args.quick else 1024)
+# small decode windows are statistically noisy at P=8 — keep >=128 tokens
+# per coalesced stage so the steady-state ratio is meaningful
+BATCH = 128
+
+# one SessionConfig for both front doors: tdorch engine + adaptive
+# hot-chunk replication (hot experts / hot vocab rows elected per stage)
+cfg = SessionConfig(engine="tdorch",
+                    replication={"num_hot": max(4, E // 4), "refresh": 1,
+                                 "decay": 0.5, "min_count": 2.0})
+
+embed = EmbeddingStore(V, d, P, seed=0)
+embed.init_table(1)
+router = MoERouter(E, d, f, P, top_k=k, seed=0)
+router.init_weights(2)
+
+# open-loop request stream: Zipf token ids into Zipf-routed experts (the
+# trained-MoE regime — both the vocab head and the expert head are hot)
+_, top_i, gates = router.zipf_routing(T, alpha=1.2, seed=3)
+rng = np.random.default_rng(4)
+token_ids = zipf_keys_stationary(T, V, 1.2, rng, rng.permutation(V))
 
 t0 = time.perf_counter()
-seqs = generate(model, params, prompts, GEN)
-dt = time.perf_counter() - t0
-print(f"prefill({B}×{S}) + decode({GEN}) in {dt:.2f}s "
-      f"-> {B * GEN / dt:.1f} tok/s (CPU, incl. compile)")
+with embed.serve(mode="sync", session_config=cfg,
+                 config={"max_batch": BATCH}) as emb_fe:
+    lookups = [emb_fe.lookup(i) for i in token_ids]
+    emb_fe.drain()
+    x = np.stack([fut.result() for fut in lookups])
 
-# consistency: greedy decode == argmax of teacher-forced logits
-full, _, _ = model.forward(params, tokens=seqs[:, :-1])
-greedy = np.asarray(jnp.argmax(full[:, S - 1:], axis=-1))
-print("decode==teacher-forced argmax:",
-      bool((greedy == np.asarray(seqs[:, S:])).all()))
-print("sample:", np.asarray(seqs[0, S:S + 16]).tolist())
+with router.serve(mode="sync", session_config=cfg,
+                  config={"max_batch": BATCH}) as moe_fe:
+    # first window = directory warmup (Phase-1 histogram is cold until the
+    # first election); the steady-state work_ratio is measured after it
+    futs = [moe_fe.decode(x[t], top_i[t], gates[t]) for t in range(BATCH)]
+    moe_fe.drain()
+    warm_work = router.session(config=cfg).report.per_machine()["work"].copy()
+    futs += [moe_fe.decode(x[t], top_i[t], gates[t])
+             for t in range(BATCH, T)]
+    moe_fe.drain()
+    y = np.stack([fut.result() for fut in futs])
+dt = time.perf_counter() - t0
+
+assert np.allclose(x, EmbeddingStore.oracle_lookup(embed.table, token_ids))
+assert np.allclose(y, router.oracle(x, top_i, gates))
+print(f"served {2 * T}/{2 * T} requests ({T} lookups + {T} decodes) "
+      f"in {dt:.2f}s")
+
+# the load-balance headline: per-machine FFN work of the orchestrated
+# session vs the naive all-to-all arm on the same routed traffic
+work = router.session(config=cfg).report.per_machine()["work"] - warm_work
+orch = float(work.max() / work.mean())
+naive = router.naive_dispatch(x, top_i, gates).work_ratio
+hot = embed.session(config=cfg).report.replica_local_words
+print(f"work_ratio: orchestrated={orch:.2f}  naive all-to-all={naive:.2f} "
+      f"(max/mean per-machine FFN work, Zipf α=1.2)")
+print(f"replica-local embedding words (hot rows served locally): {hot:.0f}")

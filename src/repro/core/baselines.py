@@ -59,9 +59,10 @@ class DirectPullEngine:
     with outbound B-word replies."""
 
     def __init__(self, num_machines: int, work_per_task: float = 1.0,
-                 backend=None):
+                 work_per_pair: float = 0.0, backend=None):
         self.P = int(num_machines)
         self.work_per_task = work_per_task
+        self.work_per_pair = work_per_pair
         self.backend = make_backend(backend)
 
     def run_stage(self, tasks, store, f, write_back="add", return_results=False,
@@ -88,6 +89,8 @@ class DirectPullEngine:
                                    want_result=return_results,
                                    replicas=replicas)
         cost.work(tasks.origin, self.work_per_task)
+        if self.work_per_pair and tasks.nnz:
+            cost.work(tasks.origin[tasks.pair_task], self.work_per_pair)
         cost.end()
         # results already live at the task's origin machine — no return traffic
 
@@ -121,9 +124,10 @@ class DirectPushEngine:
     their primary key's home and pull the remaining chunks there."""
 
     def __init__(self, num_machines: int, work_per_task: float = 1.0,
-                 backend=None):
+                 work_per_pair: float = 0.0, backend=None):
         self.P = int(num_machines)
         self.work_per_task = work_per_task
+        self.work_per_pair = work_per_pair
         self.backend = make_backend(backend)
 
     def run_stage(self, tasks, store, f, write_back="add", return_results=False,
@@ -194,6 +198,8 @@ class DirectPushEngine:
                                    want_result=return_results,
                                    exec_site=exec_site, replicas=replicas)
         cost.work(exec_site, self.work_per_task)
+        if self.work_per_pair and tasks.nnz:
+            cost.work(exec_site[tasks.pair_task], self.work_per_pair)
         results = out.get("result")
         if return_results and results is not None:
             w_r = results.shape[1] if results.ndim > 1 else 1
@@ -231,9 +237,10 @@ class SortBasedEngine:
     balance (generous to the baseline)."""
 
     def __init__(self, num_machines: int, work_per_task: float = 1.0,
-                 backend=None):
+                 work_per_pair: float = 0.0, backend=None):
         self.P = int(num_machines)
         self.work_per_task = work_per_task
+        self.work_per_pair = work_per_pair
         self.backend = make_backend(backend)
 
     def run_stage(self, tasks, store, f, write_back="add", return_results=False,
@@ -276,6 +283,8 @@ class SortBasedEngine:
                                    want_result=return_results,
                                    exec_site=sorted_machine, replicas=replicas)
         cost.work(sorted_machine, self.work_per_task)
+        if self.work_per_pair and tasks.nnz:
+            cost.work(sorted_machine[tasks.pair_task], self.work_per_pair)
         cost.end()
 
         # ---- pass 3: reverse broadcast (write-backs) + reverse sort

@@ -16,9 +16,19 @@ This module is a thin client of the session-level hot-chunk subsystem
 rows is `replication.decayed_election` — the exact same electorate the
 `Orchestrator` / `GraphSession` replica directories run — applied to a
 replicated on-device cache instead of a machine bitmap.
+
+.. deprecated::
+    The standalone cache path (`init_cache` / `refresh_cache` keeping its
+    own histogram) is superseded by `repro.paramserve.EmbeddingStore`: a
+    replicating session owns ONE `HotChunkReplicator` directory (fed by
+    Phase-1 contention detection, elected by the same `decayed_election`)
+    and `EmbeddingStore.device_cache()` / `cache_from_replicator` export it
+    as this module's `EmbedCache` view — one electorate, two realizations.
+    `embed_skew_aware` itself (the jit-friendly device gather) stays.
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -27,6 +37,12 @@ from jax import lax
 
 from .replication import decayed_election
 from .spmd import detect_contention
+
+_DEPRECATION = (
+    "the standalone EmbedCache bookkeeping ({fn}) is deprecated: use "
+    "repro.paramserve.EmbeddingStore with a replicating session — its "
+    "device_cache() exports the session's shared HotChunkReplicator "
+    "directory as the same EmbedCache view (see docs/paramserve.md)")
 
 
 class EmbedCache(NamedTuple):
@@ -37,6 +53,8 @@ class EmbedCache(NamedTuple):
 
 
 def init_cache(table: jnp.ndarray, num_hot: int) -> EmbedCache:
+    warnings.warn(_DEPRECATION.format(fn="init_cache"), DeprecationWarning,
+                  stacklevel=2)
     V, d = table.shape
     return EmbedCache(
         hot_ids=jnp.zeros((num_hot,), jnp.int32),
@@ -51,12 +69,38 @@ def refresh_cache(table: jnp.ndarray, cache: EmbedCache,
     """Re-elect the hot set from the running histogram (Phase 2 pull: the
     elected rows are replicated). One `decayed_election` step of the shared
     subsystem; decay keeps the histogram adaptive."""
+    warnings.warn(_DEPRECATION.format(fn="refresh_cache"),
+                  DeprecationWarning, stacklevel=2)
     H = cache.hot_ids.shape[0]
     hot_ids, lookup, _valid, counts = decayed_election(
         cache.counts, H, decay=decay, min_count=1)
     hot_rows = table[hot_ids]
     return EmbedCache(hot_ids=hot_ids.astype(jnp.int32), hot_rows=hot_rows,
                       lookup=lookup, counts=counts)
+
+
+def cache_from_replicator(table, replicator) -> EmbedCache:
+    """Export a session's `HotChunkReplicator` directory as an `EmbedCache`.
+
+    The replacement for the standalone `init_cache`/`refresh_cache` loop:
+    the session already runs the decayed election (fed by Phase-1 contention
+    detection on real request streams), so the device cache becomes a
+    jit-friendly VIEW of that one electorate — `hot_ids` are the replicated
+    chunks, `lookup` their directory slots, `counts` the live histogram.
+    Rows of elected-but-out-of-range ids never occur (the electorate is over
+    this table's chunk keys). `embed_skew_aware` consumes the result
+    unchanged.
+    """
+    table = jnp.asarray(table)
+    replicas = replicator.replicas
+    hot_ids = jnp.asarray(replicas.hot_ids, dtype=jnp.int32)
+    lookup = jnp.asarray(replicas.lookup, dtype=jnp.int32)
+    counts = jnp.asarray(
+        jnp.rint(jnp.asarray(replicator.counts)), dtype=jnp.int32)
+    hot_rows = (table[hot_ids] if hot_ids.size
+                else jnp.zeros((0, table.shape[1]), table.dtype))
+    return EmbedCache(hot_ids=hot_ids, hot_rows=hot_rows, lookup=lookup,
+                      counts=counts)
 
 
 def embed_skew_aware(table: jnp.ndarray, ids: jnp.ndarray,

@@ -106,6 +106,7 @@ class TDOrchEngine:
         C: int | None = None,
         sigma: int | None = None,
         work_per_task: float = 1.0,
+        work_per_pair: float = 0.0,
         backend=None,
     ):
         self.P = int(num_machines)
@@ -113,6 +114,11 @@ class TDOrchEngine:
         self.C_override = C
         self.sigma_override = sigma
         self.work_per_task = work_per_task
+        # per-(task, requested-key) compute at the execution site — models
+        # workloads whose Phase-3 cost scales with arity (one expert FFN per
+        # routed pair, one gather-reduce per neighbor); 0 keeps the original
+        # per-task-only accounting bit-identical
+        self.work_per_pair = work_per_pair
         # numeric execution backend ("numpy" oracle | "jax" jitted); cost
         # accounting below is backend-independent by construction
         self.backend = make_backend(backend)
@@ -200,6 +206,8 @@ class TDOrchEngine:
         updates = out.get("update")
         results = out.get("result")
         cost.work(exec_site, self.work_per_task)
+        if self.work_per_pair and tasks.nnz:
+            cost.work(exec_site[tasks.pair_task], self.work_per_pair)
         if return_results and results is not None:
             w_r = results.shape[1] if results.ndim > 1 else 1
             cost.send(exec_site, tasks.origin, w_r + 1)

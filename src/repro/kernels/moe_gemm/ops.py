@@ -1,11 +1,18 @@
 """Public grouped-GEMM op: block-diagonal padding plumbing around the Pallas
-kernel (static worst-case pad M + G·block_m), with ragged_dot fallback."""
+kernel (static worst-case pad M + G·block_m), with ragged_dot fallback.
+
+Also home of `gathered_swiglu` — the gathered-weights form of the expert
+FFN that the paramserve `MoERouter` stage lambda runs: each task carries its
+OWN gathered expert weight rows (the orchestrator's padded multi-get view)
+instead of indexing a dense (G, ·, ·) stack, so it is the per-task dual of
+`grouped_gemm`'s sorted-by-group layout."""
 from __future__ import annotations
 
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .kernel import grouped_gemm_padded
 from .ref import grouped_gemm_ref
@@ -58,3 +65,25 @@ def grouped_gemm(x: jnp.ndarray, w: jnp.ndarray, group_sizes: jnp.ndarray, *,
                                 block_n=bn, block_k=bk,
                                 interpret=(backend == "interpret"))
     return y_pad[scatter_pos]
+
+
+def gathered_swiglu(x, w_in, w_out, gate):
+    """Per-task gathered-expert SwiGLU combine.
+
+    x: (n, d) token activations; w_in: (n, A, d, 2f) and w_out: (n, A, f, d)
+    — each task's gathered expert weight rows (slot a = the task's a-th
+    routed expert, zero-filled past its arity); gate: (n, A) combine weights
+    (0 = inactive slot, so padding contributes nothing). Returns the gated
+    expert mixture (n, d).
+
+    Same SwiGLU convention as `core.spmd.grouped_swiglu` (gate half first).
+    Written against the numpy/jnp-shared array subset so the numpy oracle
+    backend and the jitted/tracing backends run the identical expression.
+    """
+    xp = np if isinstance(x, np.ndarray) else jnp
+    f = w_out.shape[2]
+    h = xp.einsum("nd,nadf->naf", x, w_in)  # (n, A, 2f)
+    g, up = h[..., :f], h[..., f:]
+    act = g * (1.0 / (1.0 + xp.exp(-g))) * up  # silu(gate) * up
+    y = xp.einsum("naf,nafd->nad", act, w_out)  # (n, A, d)
+    return (y * gate[..., None]).sum(axis=1)

@@ -1,0 +1,17 @@
+# The parameter-server serving tier: MoE expert routing (`MoERouter`) and
+# embedding-table serving (`EmbeddingStore`) as front doors over
+# Orchestrator sessions — tokens/lookups are lambda-tasks, expert weight
+# blocks/vocab rows are data chunks, routing skew is the paper's hot-chunk
+# regime. Both take the unified `SessionConfig`, run on all three execution
+# backends, and expose `serve()` streaming modes over `repro.serve`.
+# See docs/paramserve.md.
+from .embedding import (EmbeddingFrontend, EmbeddingStore, LookupResult,
+                        UpdateResult)
+from .moe import (DecodeResult, MoEFFNLambda, MoEFrontend, MoERouter,
+                  NaiveDispatchResult)
+
+__all__ = [
+    "MoERouter", "MoEFFNLambda", "MoEFrontend",
+    "DecodeResult", "NaiveDispatchResult",
+    "EmbeddingStore", "EmbeddingFrontend", "LookupResult", "UpdateResult",
+]

@@ -1,0 +1,423 @@
+"""`MoERouter` — token→expert dispatch as an orchestration workload.
+
+Token→expert routing IS the paper's problem statement verbatim: tasks are
+routed tokens, data chunks are per-expert FFN weight blocks, and expert
+imbalance (the Zipfian routing every trained MoE exhibits) is the data hot
+spot of §2.3. The router homes each `(layer, expert)` weight block as one
+DataStore chunk; a decode step's routed tokens become one ragged CSR
+`TaskBatch` — task = token, reads = its top-k experts' chunks, context =
+the token activation ‖ its combine gates — whose stage lambda runs the
+gathered-weights expert FFN (`kernels.moe_gemm.gathered_swiglu`). Hot-expert
+replication, Phase-3 work stealing, and every engine/backend choice come for
+free from the `Orchestrator` core through the same `SessionConfig` every
+front door takes.
+
+Phase mapping (docs/paramserve.md has the full table):
+
+  Phase 1  routed-expert contention detection  = expert-demand histogram
+  Phase 2  push-pull co-location               = weight pull / token push
+  Phase 3  local execution                     = grouped expert FFN
+  Phase 4  merge-able write-backs              = (serving: none — reads only)
+
+`naive_dispatch` is the §2.3 all-to-all baseline transplanted from
+`models/moe._dispatch_local`: every assignment executes at its expert's
+home shard (classic expert parallelism), so per-machine work is exactly
+expert demand — the collapse `bench_paramserve` pins against the
+orchestrated arm.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from ..core import DataStore, Orchestrator, TaskBatch, resolve_session_config
+from ..kernels.moe_gemm.ops import gathered_swiglu
+from ..serve import Frontend, RequestFuture  # noqa: F401 (RequestFuture: API)
+
+__all__ = ["MoERouter", "MoEFFNLambda", "MoEFrontend", "DecodeResult",
+           "NaiveDispatchResult"]
+
+
+class MoEFFNLambda:
+    """The router's stage lambda: per-token gathered-expert SwiGLU.
+
+    Sees the orchestrator's padded multi-get view — `vals[i, a]` is the
+    flattened weight block (w_in ‖ w_out) of token i's a-th routed expert,
+    CSR slot order — and the token context `(x ‖ gates)`, gates aligned to
+    the same slot order. One cached instance per `(d, f, k)` (module-level
+    identity keeps the jitted backends' per-lambda trace caches warm).
+    xp-generic: the numpy oracle and the tracing backends run the identical
+    `gathered_swiglu` expression.
+    """
+
+    def __init__(self, d_model: int, d_ff: int, top_k: int):
+        self.d = int(d_model)
+        self.f = int(d_ff)
+        self.k = int(top_k)
+
+    def __repr__(self):
+        return f"MoEFFNLambda(d={self.d}, f={self.f}, k={self.k})"
+
+    def __call__(self, contexts, vals, mask) -> Dict[str, object]:
+        d, f = self.d, self.f
+        if vals.ndim == 2:  # arity-≤1 view: one expert slot
+            vals = vals[:, None, :]
+            mask = mask[:, None]
+        n, A = vals.shape[0], vals.shape[1]
+        x = contexts[:, :d]
+        gates = contexts[:, d:d + A] * mask  # inactive slots combine as 0
+        w_in = vals[..., :d * 2 * f].reshape(n, A, d, 2 * f)
+        w_out = vals[..., d * 2 * f:].reshape(n, A, f, d)
+        y = gathered_swiglu(x, w_in, w_out, gates)
+        return {"result": y}
+
+
+_LAMBDAS: Dict[Tuple[int, int, int], MoEFFNLambda] = {}
+
+
+def _ffn_lambda(d: int, f: int, k: int) -> MoEFFNLambda:
+    lam = _LAMBDAS.get((d, f, k))
+    if lam is None:
+        lam = _LAMBDAS[(d, f, k)] = MoEFFNLambda(d, f, k)
+    return lam
+
+
+def _spec_sig(spec):
+    """Hashable session-cache key for a config spec (shared shape with
+    `kvstore.hashtable._spec_sig`)."""
+    if spec is None or spec is False:
+        return None
+    if spec is True:
+        return True
+    if isinstance(spec, dict):
+        return tuple(sorted((k, _spec_sig(v)) for k, v in spec.items()))
+    try:
+        hash(spec)
+    except TypeError:
+        return id(spec)
+    return spec
+
+
+@dataclasses.dataclass
+class DecodeResult:
+    """One orchestrated decode step: combined outputs + the stage's bill."""
+
+    y: np.ndarray  # (T, d) gated expert mixture per token
+    report: object  # StageReport
+    refcount: Dict[int, int]  # Phase-1 per-expert-chunk demand
+    exec_site: np.ndarray  # (T,) machine that ran each token's FFN
+
+
+@dataclasses.dataclass
+class NaiveDispatchResult:
+    """The all-to-all baseline arm: outputs + its per-machine work model."""
+
+    y: np.ndarray  # (T, d)
+    work: np.ndarray  # (P,) FFN work units charged at each expert's home
+    work_ratio: float  # max/mean — Definition 1's balance quantity
+    dropped: int  # assignments with expert id -1 (router drops)
+
+
+class MoERouter:
+    """Per-layer expert weights homed as DataStore chunks; decode steps are
+    orchestration stages.
+
+    Chunk key `layer * E + e` holds expert e of layer `layer` as one
+    flattened `(d·2f + f·d)`-word row (w_in ‖ w_out). `decode_step` routes a
+    `(T, d)` batch of token activations with their top-k expert assignments
+    through the session: work per (token, expert) pair is charged where the
+    pair's FFN actually runs (`work_per_pair`), so `report.per_machine()`
+    asserts Definition 1 on expert-imbalanced traffic directly.
+    """
+
+    def __init__(self, num_experts: int, d_model: int, d_ff: int,
+                 num_machines: int, *, num_layers: int = 1, top_k: int = 2,
+                 seed: int = 0):
+        self.E = int(num_experts)
+        self.d = int(d_model)
+        self.f = int(d_ff)
+        self.k = int(top_k)
+        self.num_layers = int(num_layers)
+        self.P = int(num_machines)
+        width = self.d * 2 * self.f + self.f * self.d
+        self.store = DataStore.create(
+            self.num_layers * self.E, num_machines,
+            value_width=width, chunk_words=width, salt=seed)
+        # FLOPs proxy per (token, expert) assignment: 2·d·2f (in-proj)
+        # + 2·f·d (out-proj) MACs ≈ 6·d·f — the Phase-3 unit `work_per_pair`
+        # charges, so work_ratio measures FFN imbalance, not bookkeeping
+        self.ffn_work = float(6 * self.d * self.f)
+        self._sessions: Dict[tuple, Orchestrator] = {}
+
+    # ---- weights -----------------------------------------------------------
+    @property
+    def weight_width(self) -> int:
+        return self.store.value_width
+
+    def _chunk(self, layer: int) -> slice:
+        if not 0 <= layer < self.num_layers:
+            raise ValueError(f"layer {layer} out of range "
+                             f"[0, {self.num_layers})")
+        return slice(layer * self.E, (layer + 1) * self.E)
+
+    def load_weights(self, w_in: np.ndarray, w_out: np.ndarray,
+                     layer: int = 0) -> None:
+        """Home one layer's expert stack: w_in (E, d, 2f), w_out (E, f, d)."""
+        w_in = np.asarray(w_in, dtype=np.float64)
+        w_out = np.asarray(w_out, dtype=np.float64)
+        if w_in.shape != (self.E, self.d, 2 * self.f):
+            raise ValueError(f"w_in shape {w_in.shape} != "
+                             f"{(self.E, self.d, 2 * self.f)}")
+        if w_out.shape != (self.E, self.f, self.d):
+            raise ValueError(f"w_out shape {w_out.shape} != "
+                             f"{(self.E, self.f, self.d)}")
+        rows = np.concatenate(
+            [w_in.reshape(self.E, -1), w_out.reshape(self.E, -1)], axis=1)
+        sl = self._chunk(layer)
+        self.store.write_rows(np.arange(sl.start, sl.stop, dtype=np.int64),
+                              rows)
+
+    def init_weights(self, seed: int = 0) -> None:
+        """Deterministic random expert stacks for every layer (tests/bench)."""
+        rng = np.random.default_rng(seed)
+        for layer in range(self.num_layers):
+            w_in = rng.normal(0, self.d ** -0.5,
+                              (self.E, self.d, 2 * self.f))
+            w_out = rng.normal(0, self.f ** -0.5, (self.E, self.f, self.d))
+            self.load_weights(w_in, w_out, layer)
+
+    def layer_weights(self, layer: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+        """(w_in (E, d, 2f), w_out (E, f, d)) views of the homed chunks."""
+        rows = self.store.values[self._chunk(layer)]
+        cut = self.d * 2 * self.f
+        return (rows[:, :cut].reshape(self.E, self.d, 2 * self.f),
+                rows[:, cut:].reshape(self.E, self.f, self.d))
+
+    # ---- sessions ----------------------------------------------------------
+    def session(self, engine=None, *, config=None, backend=None,
+                kernel_backend=None, replication=None, replicate=None,
+                elasticity=None, **engine_opts) -> Orchestrator:
+        """The router's cached long-lived session (same alias resolution as
+        every front door). Unless overridden, sessions charge Phase-3 work
+        per (token, expert) pair at `ffn_work` units — the honest FFN cost
+        model — instead of the generic one-unit-per-task default."""
+        cfg = resolve_session_config(
+            config, engine_opts=engine_opts, engine=engine, backend=backend,
+            kernel_backend=kernel_backend, replication=replication,
+            replicate=replicate, elasticity=elasticity)
+        opts = dict(cfg.engine_opts)
+        opts.setdefault("work_per_task", 0.0)
+        opts.setdefault("work_per_pair", self.ffn_work)
+        cfg = dataclasses.replace(cfg, engine_opts=opts)
+        sig = (cfg.engine if isinstance(cfg.engine, str) else id(cfg.engine),
+               _spec_sig(cfg.replication),
+               cfg.backend if isinstance(cfg.backend, (str, type(None)))
+               else id(cfg.backend),
+               cfg.kernel_backend, _spec_sig(cfg.elasticity),
+               tuple(sorted(cfg.engine_opts.items())))
+        sess = self._sessions.get(sig)
+        if sess is None:
+            sess = self._sessions[sig] = Orchestrator(self.store, config=cfg)
+        return sess
+
+    # ---- routing -----------------------------------------------------------
+    def route_batch(self, x: np.ndarray, top_i: np.ndarray,
+                    gates: np.ndarray, layer: int = 0,
+                    origin: Optional[np.ndarray] = None) -> TaskBatch:
+        """One decode step's routed tokens as a ragged CSR TaskBatch.
+
+        x: (T, d) activations; top_i: (T, k) expert ids (-1 = dropped slot);
+        gates: (T, k) combine weights. Task i reads the chunks of its kept
+        experts (CSR order = kept slots in top-k order) and carries
+        `(x_i ‖ gates_i-compacted-to-kept-order)` as its σ = d + k context.
+        Serving reads weights only: `write_keys = -1` everywhere.
+        """
+        x = np.asarray(x, dtype=np.float64)
+        top_i = np.asarray(top_i, dtype=np.int64)
+        gates = np.asarray(gates, dtype=np.float64)
+        T = x.shape[0]
+        if x.shape != (T, self.d):
+            raise ValueError(f"x shape {x.shape} != {(T, self.d)}")
+        if top_i.shape != (T, self.k) or gates.shape != (T, self.k):
+            raise ValueError(
+                f"top_i/gates must be (T, k) = {(T, self.k)}, got "
+                f"{top_i.shape}/{gates.shape}")
+        base = layer * self.E  # bounds-checked via _chunk
+        self._chunk(layer)
+        keep = top_i >= 0  # (T, k)
+        arity = keep.sum(axis=1)
+        indptr = np.zeros(T + 1, dtype=np.int64)
+        np.cumsum(arity, out=indptr[1:])
+        indices = base + top_i[keep]
+        # compact each token's kept gates to the front so gate slot a of the
+        # context aligns with CSR slot a of the gathered padded view
+        gctx = np.zeros((T, self.k))
+        row, col = np.nonzero(keep)
+        slot = np.arange(keep.sum()) - indptr[:-1][row]
+        gctx[row, slot] = gates[keep]
+        if origin is None:
+            origin = TaskBatch.even_origins(T, self.P)
+        return TaskBatch(
+            contexts=np.concatenate([x, gctx], axis=1),
+            origin=origin,
+            write_keys=np.full(T, -1, dtype=np.int64),
+            read_indptr=indptr, read_indices=indices,
+        )
+
+    def decode_step(self, x: np.ndarray, top_i: np.ndarray,
+                    gates: np.ndarray, *, layer: int = 0, engine=None,
+                    config=None, origin=None, **kw) -> DecodeResult:
+        """Run one routed decode step through the orchestrated dispatcher."""
+        tasks = self.route_batch(x, top_i, gates, layer, origin)
+        sess = self.session(engine, config=config, **kw)
+        res = sess.run_stage(tasks, _ffn_lambda(self.d, self.f, self.k),
+                             write_back="add", return_results=True)
+        return DecodeResult(y=np.asarray(res.results), report=res.report,
+                            refcount=res.refcount, exec_site=res.exec_site)
+
+    # ---- oracle + naive baseline ------------------------------------------
+    def oracle(self, x: np.ndarray, top_i: np.ndarray, gates: np.ndarray,
+               layer: int = 0) -> np.ndarray:
+        """Dense numpy reference: gather every token's expert blocks and run
+        the same `gathered_swiglu` expression the stage lambda runs."""
+        x = np.asarray(x, dtype=np.float64)
+        top_i = np.asarray(top_i, dtype=np.int64)
+        gates = np.asarray(gates, dtype=np.float64)
+        w_in, w_out = self.layer_weights(layer)
+        keep = top_i >= 0
+        safe = np.maximum(top_i, 0)
+        w_in_g = np.where(keep[..., None, None], w_in[safe], 0.0)
+        w_out_g = np.where(keep[..., None, None], w_out[safe], 0.0)
+        return gathered_swiglu(x, w_in_g, w_out_g, gates * keep)
+
+    def naive_dispatch(self, x: np.ndarray, top_i: np.ndarray,
+                       gates: np.ndarray, *, layer: int = 0,
+                       gemm: str = "numpy") -> NaiveDispatchResult:
+        """The `_dispatch_local`-style all-to-all baseline: each assignment
+        ships to its expert's home shard and runs there (classic expert
+        parallelism), so per-machine FFN work is exactly per-expert demand —
+        no contention detection, no replication, no stealing.
+
+        `gemm="numpy"` computes with the dense float64 oracle;
+        `"ref"`/`"interpret"`/`"pallas"` sort assignments by expert and run
+        the two projections through `kernels.moe_gemm.grouped_gemm` (the
+        sorted-by-group layout the real serving kernel uses).
+        """
+        x = np.asarray(x, dtype=np.float64)
+        top_i = np.asarray(top_i, dtype=np.int64)
+        gates = np.asarray(gates, dtype=np.float64)
+        base = layer * self.E
+        self._chunk(layer)
+        keep = top_i >= 0
+        flat_e = top_i[keep]
+        dropped = int((~keep).sum())
+        # per-machine FFN work: every kept assignment charged at its
+        # expert's home — the imbalance the orchestrated arm dissolves
+        work = np.zeros(self.P, dtype=np.float64)
+        np.add.at(work, self.store.home[base + flat_e], self.ffn_work)
+        ratio = float(work.max(initial=0.0) / max(work.mean(), 1e-12))
+
+        if gemm == "numpy":
+            y = self.oracle(x, top_i, gates, layer)
+        else:
+            import jax.numpy as jnp
+
+            from ..kernels.moe_gemm.ops import grouped_gemm
+            w_in, w_out = self.layer_weights(layer)
+            tok = np.nonzero(keep)[0]
+            order = np.argsort(flat_e, kind="stable")
+            sizes = np.bincount(flat_e, minlength=self.E)
+            xs = jnp.asarray(x[tok[order]])
+            h = grouped_gemm(xs, jnp.asarray(w_in), jnp.asarray(sizes),
+                             backend=gemm)
+            g, up = jnp.split(h, 2, axis=-1)
+            act = g * (1.0 / (1.0 + jnp.exp(-g))) * up
+            out = grouped_gemm(act, jnp.asarray(w_out), jnp.asarray(sizes),
+                               backend=gemm)
+            out = np.asarray(out) * gates[keep][order][:, None]
+            y = np.zeros((x.shape[0], self.d))
+            np.add.at(y, tok[order], out)
+        return NaiveDispatchResult(y=y, work=work, work_ratio=ratio,
+                                   dropped=dropped)
+
+    # ---- synthetic routing (tests / benchmarks / examples) -----------------
+    def zipf_routing(self, num_tokens: int, alpha: float = 1.2,
+                     seed: int = 0,
+                     rank_perm: Optional[np.ndarray] = None
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """A skewed decode step: Zipf(α) expert popularity (rank-permuted by
+        seed), distinct experts per token, softmax-ish gates. Returns
+        (x (T,d), top_i (T,k), gates (T,k)) ready for `decode_step`.
+
+        Each seed draws a fresh rank→expert permutation, so consecutive
+        seeds model an adversarially NONSTATIONARY router. A trained MoE's
+        hot experts persist across decode steps — pass one `rank_perm`
+        (`rng.permutation(E)`) to every stage for that stationary regime
+        (the `zipf_keys_stationary` convention)."""
+        rng = np.random.default_rng(seed)
+        T = int(num_tokens)
+        x = rng.normal(0, 1.0, (T, self.d))
+        rank = rng.permutation(self.E) if rank_perm is None \
+            else np.asarray(rank_perm, dtype=np.int64)
+        p = 1.0 / np.arange(1, self.E + 1, dtype=np.float64) ** alpha
+        probs = np.empty(self.E)
+        probs[rank] = p / p.sum()
+        top_i = np.empty((T, self.k), dtype=np.int64)
+        for t in range(T):
+            top_i[t] = rng.choice(self.E, size=self.k, replace=False, p=probs)
+        raw = rng.uniform(0.5, 1.5, (T, self.k))
+        gates = raw / raw.sum(axis=1, keepdims=True)
+        return x, top_i, gates
+
+    # ---- streaming serving mode (repro.serve) ------------------------------
+    def serve(self, *, engine=None, backend=None, kernel_backend=None,
+              replicate=None, config=None, session_config=None,
+              layer: int = 0, mode: str = "thread",
+              double_buffer: bool = True, **kw) -> "MoEFrontend":
+        """The router's streaming front door: single routed tokens admitted
+        one at a time, coalesced into the exact decode batches
+        `decode_step` builds (serve.Frontend's windowing), executed on the
+        pinned double-buffered session pair."""
+        sess = self.session(engine, backend=backend,
+                            kernel_backend=kernel_backend,
+                            replicate=replicate, config=session_config)
+        return MoEFrontend(self, sess, layer=layer, config=config, mode=mode,
+                           double_buffer=double_buffer, **kw)
+
+
+class MoEFrontend(Frontend):
+    """`serve.Frontend` specialized to routed-token decode requests (built
+    by `MoERouter.serve()`): ``decode(x_row, experts, gates)`` returns the
+    future of the token's (d,) gated expert mixture. Tokens coalesce into
+    the same ragged CSR batches `decode_step` builds, so per-token results
+    are bit-identical to the one-shot path for the same admission order."""
+
+    def __init__(self, router: MoERouter, session, *, layer: int = 0, **kw):
+        super().__init__(session, **kw)
+        self.router = router
+        self.layer = int(layer)
+        self._lam = _ffn_lambda(router.d, router.f, router.k)
+        self.register("ffn", self._lam, write_back="add",
+                      ctx_width=router.d + router.k, result="row")
+
+    def decode(self, x_row, experts, gates, *, deadline=None
+               ) -> "RequestFuture":
+        """Admit one routed token: `x_row` (d,), `experts`/`gates` its ≤k
+        routed experts and combine weights (kept order)."""
+        r = self.router
+        experts = np.atleast_1d(np.asarray(experts, dtype=np.int64))
+        gates = np.atleast_1d(np.asarray(gates, dtype=np.float64))
+        if experts.size > r.k or experts.size != gates.size:
+            raise ValueError(
+                f"token routes to ≤ k={r.k} experts with one gate each, got "
+                f"{experts.size} experts / {gates.size} gates")
+        keep = experts >= 0
+        gctx = np.zeros(r.k)
+        gctx[:int(keep.sum())] = gates[keep]
+        base = self.layer * r.E
+        ctx = np.concatenate([np.asarray(x_row, dtype=np.float64).ravel(),
+                              gctx])
+        return self.submit("ffn", base + experts[keep], ctx=ctx,
+                           deadline=deadline)

@@ -323,6 +323,60 @@ def test_plan_emission_conformance(backend_name):
 
 
 # ---------------------------------------------------------------------------
+# paramserve front doors across backends (the serving-tier axis): the
+# MoERouter decode stage (generic gathered-SwiGLU lambda) and the
+# EmbeddingStore ops (fused first/add reads + merge-able grad writes) must
+# match the numpy oracle on values and per-phase cost on every backend —
+# the kernel backends take the ragged fused path for the embedding ops.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend_name",
+                         ["jax", "jax_spmd"] + KERNEL_BACKENDS)
+def test_paramserve_front_door_conformance(backend_name):
+    from repro.paramserve import EmbeddingStore, MoERouter
+
+    P = 4 if backend_name != "jax_spmd" else min(4, NDEV)
+    backend = BACKENDS[backend_name]
+    rng = np.random.default_rng(17)
+
+    routers = [MoERouter(6, 5, 7, P, top_k=3, seed=2) for _ in range(2)]
+    for r in routers:
+        r.init_weights(3)
+    x, ti, g = routers[0].zipf_routing(20, alpha=1.4, seed=4)
+    ti[3, 1] = -1  # ragged: a dropped slot and below a fully dropped token
+    ti[9] = -1
+    a = routers[0].decode_step(x, ti, g, backend="numpy")
+    b = routers[1].decode_step(x, ti, g, backend=backend)
+    assert np.allclose(a.y, b.y, rtol=RTOL, atol=ATOL), \
+        "MoE decode diverged from the numpy oracle"
+    assert np.array_equal(a.exec_site, b.exec_site)
+    assert a.refcount == b.refcount
+    assert_cost_parity(a.report, b.report)
+
+    stores = [EmbeddingStore(30, 3, P, seed=5) for _ in range(2)]
+    for es in stores:
+        es.init_table(6)
+    ids = rng.integers(0, 30, 11)
+    bags = [rng.integers(0, 30, rng.integers(0, 4)).tolist()
+            for _ in range(8)]
+    up_ids = np.array([4, 9, 4])
+    grads = rng.normal(size=(3, 3))
+    outs = []
+    for es, bk in zip(stores, ["numpy", backend]):
+        look = es.lookup(ids, backend=bk)
+        bag = es.lookup_bags(bags, backend=bk)
+        upd = es.update(up_ids, grads, backend=bk)
+        outs.append((look, bag, upd, es.table))
+    for va, vb in zip(outs[0][:2], outs[1][:2]):
+        assert np.allclose(va.values, vb.values, rtol=RTOL, atol=ATOL), \
+            "embedding read diverged from the numpy oracle"
+    assert np.allclose(outs[0][3], outs[1][3], rtol=RTOL, atol=ATOL), \
+        "post-update tables diverged"
+    for i in range(3):
+        assert outs[0][i].refcount == outs[1][i].refcount
+        assert_cost_parity(outs[0][i].report, outs[1][i].report)
+
+
+# ---------------------------------------------------------------------------
 # error paths: validate() messages, parity diagnostics, device-count failure
 # ---------------------------------------------------------------------------
 def _tiny_store(P=2, K=8, w=1):

@@ -35,16 +35,41 @@ def test_doc_code_blocks_execute(path):
         exec(code, ns)  # noqa: S102 — executing our own documentation
 
 
-def test_serve_example_runs():
-    """The README's streaming-serve walkthrough points at
-    examples/serve_kv.py; keep it runnable end to end (quick stream)."""
+def _run_example(name: str, *argv: str):
     import os
     import subprocess
     import sys
 
     env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
     out = subprocess.run(
-        [sys.executable, str(REPO / "examples" / "serve_kv.py"), "--quick"],
+        [sys.executable, str(REPO / "examples" / name), *argv],
         capture_output=True, text=True, timeout=600, env=env, cwd=REPO)
     assert out.returncode == 0, out.stderr
-    assert "served 2000/2000 requests" in out.stdout, out.stdout
+    return out.stdout
+
+
+def test_serve_example_runs():
+    """The README's streaming-serve walkthrough points at
+    examples/serve_kv.py; keep it runnable end to end (quick stream)."""
+    stdout = _run_example("serve_kv.py", "--quick")
+    assert "served 2000/2000 requests" in stdout, stdout
+
+
+def test_serve_decode_example_runs():
+    """The paramserve walkthrough's open-loop decode stream: embedding
+    lookups + routed-token decodes through both front doors, and the
+    orchestrated arm must beat the naive all-to-all arm on work_ratio."""
+    stdout = _run_example("serve_decode.py", "--quick")
+    assert "served 512/512 requests" in stdout, stdout
+    m = re.search(r"orchestrated=([\d.]+)\s+naive all-to-all=([\d.]+)",
+                  stdout)
+    assert m, stdout
+    assert float(m.group(1)) < float(m.group(2)), stdout
+
+
+def test_train_moe_example_runs():
+    """Train-then-serve: the MoE training driver must run its failure
+    injection + recovery and hand the trained experts to the serving tier."""
+    stdout = _run_example("train_moe.py", "--quick")
+    assert "recovered from 1 injected failure(s)" in stdout, stdout
+    assert "serving tier: decoded 64 routed tokens" in stdout, stdout
