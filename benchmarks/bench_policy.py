@@ -1,0 +1,176 @@
+"""The adaptive loop under scale-out: `engine="auto"` vs every fixed engine.
+
+Two sweeps over growing shard counts (P8 → P64):
+
+* **YCSB** — a skewed (Zipf-1.2, workload A) stationary stream is driven
+  through one replicating session per engine, plus one `engine="auto"`
+  session on the identical stream. Per cell we report words/task; the auto
+  cell additionally reports its **oracle ratio** (auto's engine words over
+  the per-stage argmin across the four fixed engines — the same quantity
+  `tests/test_policy.py` pins at ≤1.1x, here asserted as the bench gate,
+  decision traffic reported separately as `policy_words_per_stage`), plus
+  Definition 1's `work_ratio` and the BSP `h_ratio`, both gated so the
+  policy cannot trade balance for words as the mesh grows.
+
+* **PageRank** — a BA graph through `GraphSession(engine="auto")` with
+  `force_mode=None` (the sparse/dense mode policy live) vs both fixed
+  modes, reporting BSP time at the policy's round latency and words/edge.
+
+Rows: ``policy/ycsb/<wl>/zipf<γ>/P<P>/<engine>`` and
+``policy/pagerank/ba<n>/P<P>/<mode>``; deterministic metrics carry fixed
+seeds so reruns are regression-diffable.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DataStore, Orchestrator, TaskBatch
+from repro.core.cost import POLICY_PHASE, StageReport
+from repro.kvstore import make_ycsb_stream
+
+from .common import row, timeit
+
+SEED = 23
+WL = "A"
+GAMMA = 1.2
+SHARD_COUNTS = [8, 16, 32, 64]
+ENGINES = ["tdorch", "pull", "push", "sort"]
+REPLICATION = {"num_hot": 64, "refresh": 2, "decay": 0.5, "min_count": 8.0}
+
+ORACLE_GATE = 1.1   # matches tests/test_policy.py
+# word-optimal engines (push past the replication warm-up) concentrate work
+# at exec sites, so balance drifts up with P; these caps hold across the
+# whole P8→P64 sweep in both quick and full sizes (observed maxima ~2.1
+# work / ~2.8 h at P=64 quick) and fail if the policy starts trading
+# balance away for words
+WORK_RATIO_GATE = 2.5
+H_RATIO_GATE = 3.2
+ROUND_LATENCY = 4.0  # BSP L for the graph-mode comparison
+
+
+def _engine_words(stage: StageReport) -> float:
+    return sum(float(ph.sent.sum()) for ph in stage.phases
+               if ph.name != POLICY_PHASE)
+
+
+def _drive(engine, P, tasks_per_machine, nkeys, stages):
+    store = DataStore.create(nkeys, P, value_width=8, chunk_words=8)
+    sess = Orchestrator(store, engine=engine, replication=REPLICATION)
+    origin = TaskBatch.even_origins(tasks_per_machine * P, P)
+
+    def f(contexts, in_vals):
+        mul, add = contexts[:, 1:2], contexts[:, 2:3]
+        return {"update": in_vals * mul + add, "result": in_vals}
+
+    for keys, is_read, operand in make_ycsb_stream(
+            WL, tasks_per_machine, P, nkeys, gamma=GAMMA, seed=SEED,
+            stages=stages):
+        ctx = np.concatenate(
+            [is_read[:, None].astype(np.float64), operand], axis=1)
+        write_keys = np.where(is_read, np.int64(-1), keys)
+        tasks = TaskBatch(contexts=ctx, read_keys=keys,
+                          write_keys=write_keys, origin=origin)
+        sess.run_stage(tasks, f, write_back="write", return_results=True)
+    return sess
+
+
+def run(quick: bool = False):
+    tasks_per_machine = 400 if quick else 2_000
+    stages = 4 if quick else 8
+    rows = []
+
+    # ---------------- skewed YCSB: auto vs each fixed engine ---------------
+    for P in SHARD_COUNTS:
+        nkeys = 16 * tasks_per_machine
+        total_tasks = tasks_per_machine * P * stages
+        fixed = {}
+        for eng in ENGINES:
+            wall = timeit(lambda e=eng: _drive(e, P, tasks_per_machine,
+                                               nkeys, stages),
+                          repeats=1, warmup=0)
+            sess = _drive(eng, P, tasks_per_machine, nkeys, stages)
+            fixed[eng] = sess
+            wpt = float(sess.report.sent.sum()) / total_tasks
+            rows.append(row(
+                f"policy/ycsb/{WL}/zipf{GAMMA}/P{P}/{eng}", wall * 1e6,
+                f"words_per_task={wpt:.3f}",
+                seed=SEED, words_per_task=wpt, wall_ms=wall * 1e3))
+
+        wall = timeit(lambda: _drive("auto", P, tasks_per_machine,
+                                     nkeys, stages),
+                      repeats=1, warmup=0)
+        auto = _drive("auto", P, tasks_per_machine, nkeys, stages)
+        oracle = sum(min(_engine_words(fixed[e].report.stages[i])
+                         for e in ENGINES) for i in range(stages))
+        realized = sum(_engine_words(st) for st in auto.report.stages)
+        oracle_ratio = realized / oracle
+        pm = auto.report.per_machine()
+        wpt = float(auto.report.sent.sum()) / total_tasks
+        switches = sum(d.switched for d in auto.report.policy_decisions)
+        chosen = ",".join(d.choice for d in auto.report.policy_decisions)
+        rows.append(row(
+            f"policy/ycsb/{WL}/zipf{GAMMA}/P{P}/auto", wall * 1e6,
+            f"oracle_ratio={oracle_ratio:.4f};words_per_task={wpt:.3f};"
+            f"work_ratio={pm['work_ratio']:.3f};h_ratio={pm['h_ratio']:.3f};"
+            f"chose=[{chosen}]",
+            seed=SEED, oracle_ratio=oracle_ratio, words_per_task=wpt,
+            work_ratio=pm["work_ratio"], h_ratio=pm["h_ratio"],
+            policy_words_per_stage=auto.report.policy_words / stages,
+            switches=float(switches), wall_ms=wall * 1e3))
+        assert oracle_ratio <= ORACLE_GATE, (
+            f"P={P}: auto realized {oracle_ratio:.3f}x the per-stage argmin "
+            f"oracle — the policy lost the {ORACLE_GATE}x gate")
+        assert pm["work_ratio"] <= WORK_RATIO_GATE, (
+            f"P={P}: auto work_ratio {pm['work_ratio']:.2f} > "
+            f"{WORK_RATIO_GATE} — the policy traded balance for words")
+        assert pm["h_ratio"] <= H_RATIO_GATE, (
+            f"P={P}: auto h_ratio {pm['h_ratio']:.2f} > {H_RATIO_GATE}")
+
+    # ---------------- PageRank: the sparse/dense mode policy ---------------
+    from repro.graph import generators
+    from repro.graph.algorithms import pagerank
+    from repro.graph.partition import ingest
+    from repro.graph.session import GraphSession
+
+    n = 3_000 if quick else 30_000
+    iters = 4 if quick else 8
+    g = generators.barabasi_albert(n, 4, seed=SEED)
+    for P in SHARD_COUNTS:
+        og = ingest(g, P=P)
+        arms = {"auto": dict(engine="auto", force_mode=None),
+                "sparse": dict(engine=None, force_mode="sparse"),
+                "dense": dict(engine=None, force_mode="dense")}
+        bsp = {}
+        for arm, spec in arms.items():
+            def call(spec=spec):
+                sess = GraphSession(og, engine=spec["engine"])
+                pagerank(og, max_iter=iters, tol=0.0, session=sess,
+                         force_mode=spec["force_mode"])
+                return sess
+
+            wall = timeit(call, repeats=1, warmup=0)
+            sess = call()
+            # apples-to-apples BSP: mode phases only (the decision toll is
+            # a separate, O(P)-per-round metric)
+            bsp[arm] = sum(
+                StageReport(st.P, [ph for ph in st.phases
+                                   if ph.name != POLICY_PHASE]
+                            ).bsp_time(t=0.0, L=ROUND_LATENCY)
+                for st in sess.report.stages)
+            wpe = sum(_engine_words(st) for st in sess.report.stages) / g.m
+            metrics = dict(bsp_time=bsp[arm], words_per_edge=wpe,
+                           wall_ms=wall * 1e3)
+            derived = f"bsp_time={bsp[arm]:.1f};words_per_edge={wpe:.3f}"
+            if arm == "auto":
+                modes = ",".join(d.choice
+                                 for d in sess.report.policy_decisions)
+                metrics["policy_words_per_round"] = \
+                    sess.report.policy_words / max(sess.num_rounds, 1)
+                derived += f";modes=[{modes}]"
+            rows.append(row(f"policy/pagerank/ba{n}/P{P}/{arm}", wall * 1e6,
+                            derived, seed=SEED, **metrics))
+        assert bsp["auto"] <= ORACLE_GATE * min(bsp.values()) + 1e-9, (
+            f"pagerank P={P}: auto BSP {bsp['auto']:.1f} exceeds "
+            f"{ORACLE_GATE}x the better fixed mode "
+            f"({min(bsp.values()):.1f})")
+    return rows

@@ -14,6 +14,7 @@
     (beyond) bench_elastic    live migration under a nonstationary hot-set shift
     (beyond) bench_paramserve parameter-server tier: orchestrated MoE dispatch
                               + embedding serving vs naive (absorbs bench_moe)
+    (beyond) bench_policy    engine="auto" adaptive loop vs fixed engines/modes
 
 Prints ``name,us_per_call,derived`` CSV. `--quick` shrinks sizes ~10×.
 `--json PATH` writes schema-versioned per-suite row files (fixed seeds, so
@@ -28,6 +29,7 @@ import time
 
 from . import (bench_ablation, bench_backend, bench_breakdown, bench_elastic,
                bench_graph, bench_kernels, bench_paramserve, bench_plan,
+               bench_policy,
                bench_scaling, bench_serve, bench_skew, bench_spmd, bench_ycsb)
 from .common import print_csv, write_json
 
@@ -36,6 +38,7 @@ SUITES = {
     "skew": bench_skew,
     "backend": bench_backend,
     "plan": bench_plan,
+    "policy": bench_policy,
     "spmd": bench_spmd,
     "graph": bench_graph,
     "scaling": bench_scaling,

@@ -19,6 +19,8 @@ from .fusedlam import FUSED_READ_OPS, FusedStageLambda, fused_read
 from .interface import ENGINES, make_engine, orchestration, register_engine
 from .mergeops import MERGE_OPS, MergeOp, get_merge_op
 from .plan import CARRY, LoopRecord, PlanResult, PlanState, StagePlan
+from .policy import (AutoEngine, PhaseCostEstimate, PolicyConfig,
+                     PolicyDecision, StageLayout, StagePolicy)
 from .replication import (HotChunkReplicator, ReplicaSet, ReplicationConfig,
                           make_replicator)
 from .session import Orchestrator
@@ -40,6 +42,8 @@ __all__ = [
     "ENGINES", "make_engine", "orchestration", "register_engine",
     "MERGE_OPS", "MergeOp", "get_merge_op",
     "CARRY", "LoopRecord", "PlanResult", "PlanState", "StagePlan",
+    "AutoEngine", "PhaseCostEstimate", "PolicyConfig", "PolicyDecision",
+    "StageLayout", "StagePolicy",
     "HotChunkReplicator", "ReplicaSet", "ReplicationConfig", "make_replicator",
     "Orchestrator",
 ]

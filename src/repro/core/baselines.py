@@ -115,6 +115,48 @@ class DirectPullEngine:
         return OrchestrationResult(out.get("result"), cost.totals(),
                                    tasks.origin.copy(), {})
 
+    def estimate_cost(self, histogram, layout):
+        """Replay the direct-pull charging paths above against a scratch
+        accumulator (the `engine="auto"` estimator contract, core/policy.py).
+        Bit-identical to the realized report under the layout's width/update
+        assumptions; `histogram` is accepted per the contract (pull's bill
+        is a closed form of the deduped pair stream)."""
+        from .policy import PhaseCostEstimate
+        tasks, store, replicas = layout.tasks, layout.store, layout.replicas
+        cost = CostAccumulator(self.P)
+        B = store.chunk_words
+        cost.begin("pull_fetch")
+        if tasks.nnz:
+            org, key = _dedup_pairs(tasks.origin[tasks.pair_task],
+                                    tasks.read_indices, store.num_keys)
+            org, key = _split_replica_local(cost, store, replicas, org, key)
+            if key.size:
+                hm = store.home[key]
+                cost.send(org, hm, 2)
+                cost.work(hm, 1.0)
+                cost.send(hm, org, B + 1)
+                cost.tick(2)
+        cost.end()
+        cost.begin("pull_execute")
+        cost.work(tasks.origin, self.work_per_task)
+        if self.work_per_pair and tasks.nnz:
+            cost.work(tasks.origin[tasks.pair_task], self.work_per_pair)
+        cost.end()
+        cost.begin("pull_write_back")
+        writes = tasks.write_keys >= 0
+        if layout.assume_updates and writes.any():
+            w_u = layout.update_width
+            hm = store.home[tasks.write_keys[writes]]
+            cost.send(tasks.origin[writes], hm, w_u + 1)
+            cost.work(hm, 1.0)
+            cost.tick()
+            charge_write_through(cost, store.home, replicas,
+                                 tasks.write_keys[writes], w_u)
+            uniq = np.unique(tasks.write_keys[writes])
+            cost.work(store.home[uniq], 1.0)  # the ⊙-apply charge
+        cost.end()
+        return PhaseCostEstimate("pull", cost.totals())
+
 
 @register_engine("push")
 class DirectPushEngine:
@@ -227,6 +269,73 @@ class DirectPushEngine:
 
         return OrchestrationResult(results, cost.totals(), exec_site, {})
 
+    def estimate_cost(self, histogram, layout):
+        """Replay the direct-push charging paths (no work stealing — the
+        documented estimator exclusion, shared with TD-Orch's estimator)."""
+        from .policy import PhaseCostEstimate
+        tasks, store, replicas = layout.tasks, layout.store, layout.replicas
+        cost = CostAccumulator(self.P)
+        sigma = tasks.ctx_words
+        B = store.chunk_words
+        primary = tasks.primary_read
+        reads = primary >= 0
+        exec_site = tasks.origin.copy()
+        exec_site[reads] = store.home[primary[reads]]
+        wr_only = (~reads) & (tasks.write_keys >= 0)
+        exec_site[wr_only] = store.home[tasks.write_keys[wr_only]]
+        prim_local = np.zeros(tasks.n, dtype=bool)
+        if replicas is not None and replicas.hot_ids.size:
+            prim_local[reads] = replicas.holds(primary[reads],
+                                               tasks.origin[reads])
+            exec_site[prim_local] = tasks.origin[prim_local]
+        cost.begin("push_offload")
+        cost.send(tasks.origin, exec_site, sigma + _L0_HEADER)
+        cost.tick()
+        if prim_local.any():
+            cost.local(tasks.origin[prim_local], store.value_width)
+        if tasks.max_arity > 1:
+            is_primary = np.zeros(tasks.nnz, dtype=bool)
+            is_primary[tasks.read_indptr[:-1][reads]] = True
+            sec = np.flatnonzero(~is_primary)
+            if sec.size:
+                site, key = _dedup_pairs(exec_site[tasks.pair_task[sec]],
+                                         tasks.read_indices[sec],
+                                         store.num_keys)
+                site, key = _split_replica_local(cost, store, replicas,
+                                                 site, key)
+                if key.size:
+                    hm = store.home[key]
+                    cost.send(site, hm, 2)
+                    cost.send(hm, site, B + 1)
+                    cost.tick(2)
+        cost.end()
+        cost.begin("push_execute")
+        cost.work(exec_site, self.work_per_task)
+        if self.work_per_pair and tasks.nnz:
+            cost.work(exec_site[tasks.pair_task], self.work_per_pair)
+        if layout.return_results:
+            cost.send(exec_site, tasks.origin, layout.result_width + 1)
+            cost.tick()
+        cost.end()
+        cost.begin("push_write_back")
+        writes = tasks.write_keys >= 0
+        if layout.assume_updates and writes.any():
+            w_u = layout.update_width
+            cross = writes & (store.home[np.maximum(tasks.write_keys, 0)]
+                              != exec_site)
+            if cross.any():
+                org, key = _dedup_pairs(exec_site[cross],
+                                        tasks.write_keys[cross],
+                                        store.num_keys)
+                cost.send(org, store.home[key], w_u + 1)
+                cost.tick()
+            charge_write_through(cost, store.home, replicas,
+                                 tasks.write_keys[writes], w_u)
+            uniq = np.unique(tasks.write_keys[writes])
+            cost.work(store.home[uniq], 1.0)  # the ⊙-apply charge
+        cost.end()
+        return PhaseCostEstimate("push", cost.totals())
+
 
 @register_engine("sort")
 class SortBasedEngine:
@@ -311,3 +420,63 @@ class SortBasedEngine:
         cost.end()
 
         return OrchestrationResult(results, cost.totals(), sorted_machine, {})
+
+    def estimate_cost(self, histogram, layout):
+        """Replay the sample-sort charging paths. Run placement uses
+        `backend.argsort_stable`, which is parity-pinned across backends —
+        so the estimate (and any policy decision built on it) is
+        bit-identical on numpy/jax/jax_spmd."""
+        from .policy import PhaseCostEstimate
+        tasks, store, replicas = layout.tasks, layout.store, layout.replicas
+        cost = CostAccumulator(self.P)
+        P = self.P
+        sigma = tasks.ctx_words
+        B = store.chunk_words
+        n = tasks.n
+        primary = tasks.primary_read
+        cost.begin("sort_pass")
+        order = self.backend.argsort_stable(
+            np.where(primary >= 0, primary, tasks.write_keys))
+        block = max(1, -(-n // P))
+        sorted_machine = np.empty(n, dtype=np.int64)
+        sorted_machine[order] = np.arange(n, dtype=np.int64) // block
+        cost.send(tasks.origin, sorted_machine, sigma + _L0_HEADER)
+        cost.send(np.arange(P), np.zeros(P, dtype=np.int64),
+                  np.log2(max(n, 2)))
+        cost.work(sorted_machine, np.log2(max(n / P, 2)))
+        cost.tick(2)
+        cost.end()
+        cost.begin("sort_broadcast")
+        if tasks.nnz:
+            mch, key = _dedup_pairs(sorted_machine[tasks.pair_task],
+                                    tasks.read_indices, store.num_keys)
+            mch, key = _split_replica_local(cost, store, replicas, mch, key)
+            if key.size:
+                cost.send(store.home[key], mch, B + 1)
+                cost.tick()
+        cost.end()
+        cost.begin("sort_execute")
+        cost.work(sorted_machine, self.work_per_task)
+        if self.work_per_pair and tasks.nnz:
+            cost.work(sorted_machine[tasks.pair_task], self.work_per_pair)
+        cost.end()
+        cost.begin("sort_reverse")
+        writes = tasks.write_keys >= 0
+        if layout.assume_updates:
+            if writes.any():
+                w_u = layout.update_width
+                mch, key = _dedup_pairs(sorted_machine[writes],
+                                        tasks.write_keys[writes],
+                                        store.num_keys)
+                cost.send(mch, store.home[key], w_u + 1)
+                charge_write_through(cost, store.home, replicas,
+                                     tasks.write_keys[writes], w_u)
+                uniq = np.unique(tasks.write_keys[writes])
+                cost.work(store.home[uniq], 1.0)  # the ⊙-apply charge
+        if layout.return_results:
+            cost.send(sorted_machine, tasks.origin, layout.result_width + 1)
+        else:
+            cost.send(sorted_machine, tasks.origin, sigma + _L0_HEADER)
+        cost.tick(2)
+        cost.end()
+        return PhaseCostEstimate("sort", cost.totals())

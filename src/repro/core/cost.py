@@ -33,6 +33,13 @@ STEAL_PHASE = "phase3_steal"
 RECOVERY_PHASE = "recovery"
 ELASTIC_PHASES = (MIGRATION_PHASE, STEAL_PHASE, RECOVERY_PHASE)
 
+# Decision-latency phase of the engine="auto" stage policy (core/policy.py):
+# per-stage demand sketches to the coordinator plus the decision broadcast
+# are charged here, so `SessionReport.policy_words` — and parity tests via
+# `assert_cost_parity(..., ignore=(POLICY_PHASE,))` — keep the cost of
+# *choosing* an engine separable from the cost of running it.
+POLICY_PHASE = "policy"
+
 
 @dataclasses.dataclass
 class PhaseCost:
@@ -286,6 +293,10 @@ class SessionReport:
     # stealing happened, so reports stay cheap when elasticity is off)
     _stolen_out: Optional[np.ndarray] = None
     _stolen_in: Optional[np.ndarray] = None
+    # engine="auto" stage decisions (core/policy.py PolicyDecision records:
+    # chosen engine, predicted vs. realized words, decision latency) —
+    # empty for fixed-engine sessions
+    policy_decisions: List[object] = dataclasses.field(default_factory=list)
 
     def add(self, report: StageReport) -> None:
         if report.P != self.P:
@@ -368,6 +379,17 @@ class SessionReport:
         receive side so the two restore sources add up consistently."""
         return sum(float(ph.recv.sum()) for st in self.stages
                    for ph in st.phases if ph.name == RECOVERY_PHASE)
+
+    # ---- adaptive-policy accounting (core/policy.py) ----------------------
+    @property
+    def policy_words(self) -> float:
+        """Words spent *deciding* (demand sketches + decision broadcasts,
+        charged under the `policy` phase by the engine="auto" policy)."""
+        return self._phase_words(POLICY_PHASE)
+
+    def record_decision(self, decision) -> None:
+        """Append one engine="auto" stage decision (a PolicyDecision)."""
+        self.policy_decisions.append(decision)
 
     def record_steals(self, src: np.ndarray, dst: np.ndarray) -> None:
         """Fold one stage's stolen-task movements (donor machine per task,

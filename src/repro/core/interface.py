@@ -44,6 +44,7 @@ import numpy as np
 # importing the engine modules populates the registry
 from . import baselines as _baselines  # noqa: F401
 from . import engine as _engine  # noqa: F401
+from . import policy as _policy  # noqa: F401  (registers engine="auto")
 from .config import SessionConfig, resolve_session_config
 from .datastore import DataStore, TaskBatch
 from .elasticity import (ElasticityConfig, MigrationConfig, RecoveryConfig,

@@ -205,6 +205,12 @@ class Orchestrator:
             pre.append(ref_report)
         res = self.engine.run_stage(tasks, self.store, f, write_back=write_back,
                                     return_results=return_results, **extra)
+        decision = getattr(res, "decision", None)
+        if decision is not None:
+            # engine="auto": keep the stage's PolicyDecision on the session
+            # ledger, indexed by the stage it decided
+            decision.stage_index = self._report.num_stages
+            self._report.record_decision(decision)
         if self.replicator is not None:
             # feed the demand histogram: Phase-1 meta-task counts when the
             # engine reports them (tdorch), the batch's requested keys as

@@ -43,6 +43,49 @@ from .session import VALUE_WORDS, TreeCharger, _expand_csr, session_for
 from .vertex_subset import DistVertexSubset
 
 
+def _estimate_mode_costs(og, sess, idx, replicas, dedup):
+    """Charge both propagation modes' bills against scratch accumulators —
+    the graph-side `estimate_cost` (core/policy.py contract). Exact by
+    construction: the same `TreeCharger.charge`/`direct_broadcast` calls the
+    realized round makes, over the same frontier and replica discount. Only
+    the source-propagation phase is mode-DEPENDENT (edge compute and the
+    destination-tree write-back cost the same either way), so the argmin
+    over these estimates is the argmin over full round bills."""
+    from ..core.policy import PhaseCostEstimate
+    out = {}
+    for mode in ("sparse", "dense"):
+        cost = CostAccumulator(og.P)
+        cost.begin(f"edgemap_{mode}")
+        if idx.size:
+            live = idx
+            if replicas is not None:
+                slot = replicas.lookup[idx]
+                hot = slot >= 0
+                hot[hot] = replicas.holders[slot[hot]].all(axis=1)
+                if hot.any() and (dedup or mode == "sparse"):
+                    flat_h, _ = _expand_csr(og.src_grp_indptr, idx[hot])
+                    cost.local(og.src_grp_machines[flat_h], VALUE_WORDS)
+                    live = idx[~hot]
+            if mode == "sparse":
+                h = (sess.src_charger.charge(cost, live, VALUE_WORDS,
+                                             upward=False)
+                     if live.size else 0)
+                cost.tick(max(h, 1))
+            else:
+                if dedup:
+                    if live.size:
+                        sess.src_charger.direct_broadcast(cost, live,
+                                                          VALUE_WORDS)
+                else:
+                    for mch in np.arange(og.P, dtype=np.int64):
+                        cost.send(og.vertex_home[idx],
+                                  np.full(idx.size, mch), VALUE_WORDS)
+                cost.tick(1)
+        cost.end()
+        out[mode] = PhaseCostEstimate(mode, cost.totals())
+    return out
+
+
 @dataclasses.dataclass
 class EdgeMapStats:
     mode: str
@@ -101,8 +144,19 @@ def dist_edge_map(
         replicas = None
 
     # ---- mode selection (§5.1): sparse for small frontiers ---------------
+    # A session armed with engine="auto" (GraphSession.mode_policy) replaces
+    # the static Ligra direction threshold with the cost model itself: both
+    # modes' propagation bills are charged against scratch accumulators
+    # (exact — the downstream edge-compute and write-back costs are
+    # mode-independent) and the argmin wins under the BSP objective.
+    policy = getattr(sess, "mode_policy", None)
+    decision = None
     if force_mode is not None:
         mode = force_mode
+    elif policy is not None and account and not per_edge_comm:
+        estimates = _estimate_mode_costs(og, sess, idx, replicas, dedup)
+        decision = policy.choose(estimates, kind="edge_map_mode")
+        mode = decision.choice
     else:
         mode = "sparse" if (sum_deg + idx.size) < threshold_frac * (g.m + g.n) else "dense"
 
@@ -231,6 +285,20 @@ def dist_edge_map(
     if cost is not None:
         cost.end()
         report = cost.totals()
+        if decision is not None:
+            # the mode decision's bill rides this round's report as its own
+            # `policy` phase (frontier holders sketch demand to the
+            # coordinator, which broadcasts the verdict), and the decision
+            # itself lands on the session ledger. realized_words is the full
+            # round; predicted covers the mode-dependent propagation part.
+            from ..core.policy import decision_phase
+            decision.realized_words = float(report.sent.sum())
+            policy_report = decision_phase(
+                og.P, np.unique(og.vertex_home[idx]), policy.config)
+            decision.policy_words = float(policy_report.sent.sum())
+            report = StageReport(og.P, policy_report.phases + report.phases)
+            decision.stage_index = len(getattr(sess, "stats", []))
+            sess.report.record_decision(decision)
         if ref_report is not None:
             # the refresh broadcast is part of this round's bill, kept as
             # its own `replica_refresh` phase for the session-level split

@@ -124,8 +124,18 @@ class GraphSession:
     through the one alias table, and a kwarg that contradicts the config
     raises. Graph rounds never reach exec-site assignment or the
     Orchestrator stage boundary, so `elasticity=` in the config is rejected
-    here rather than silently ignored. `engine=` in the config is irrelevant
-    to tree-structured edge maps and is ignored.
+    here rather than silently ignored.
+
+    `engine=` (or `SessionConfig.engine`): tree-structured edge maps have
+    no pluggable engine, so fixed engine names are irrelevant here and stay
+    ignored — EXCEPT `engine="auto"`, which arms the session's per-round
+    sparse/dense *mode* policy (the graph-side half of the adaptive loop,
+    `repro.core.policy`): each `edge_map` round with `force_mode=None`
+    estimates both propagation modes' bills exactly and picks the argmin
+    under the BSP objective (with hysteresis), replacing the static Ligra
+    direction threshold. Decisions land on `report.policy_decisions`, and
+    decision latency is charged under the `policy` phase. Policy knobs ride
+    `SessionConfig.engine_opts["policy"]` (a `PolicyConfig` kwargs dict).
     """
 
     og: "OrchestratedGraph"  # noqa: F821 — forward ref, avoids import cycle
@@ -135,13 +145,15 @@ class GraphSession:
     kernel_backend: object = None  # fused-kernel dispatch (device backends)
     config: object = None  # SessionConfig | dict — the unified spelling
     replicate: object = None  # legacy alias for replication
+    engine: object = None  # "auto" arms the sparse/dense mode policy
 
     def __post_init__(self):
         og = self.og
         cfg = resolve_session_config(
             self.config, backend=self.backend,
             kernel_backend=self.kernel_backend,
-            replication=self.replication, replicate=self.replicate)
+            replication=self.replication, replicate=self.replicate,
+            engine=self.engine)
         if cfg.elasticity is not None:
             raise ValueError(
                 "GraphSession does not support elasticity: DistEdgeMap "
@@ -152,6 +164,21 @@ class GraphSession:
         self.backend = cfg.backend
         self.kernel_backend = cfg.kernel_backend
         self.replication = cfg.replication
+        # engine="auto": the per-round sparse/dense mode policy. The BSP
+        # objective is what separates the modes — their propagation *volumes*
+        # tie under T1 dedup (one copy per tree member either way); what
+        # differs is tree depth (rounds) vs. root fan-out (max_comm), so the
+        # decision needs max_comm + L·rounds, not total words.
+        self.mode_policy = None
+        if cfg.engine == "auto":
+            from ..core.policy import StagePolicy, make_policy_config
+            spec = cfg.engine_opts.get("policy")
+            if spec is None or isinstance(spec, dict):
+                spec = dict(spec or {})
+                spec.setdefault("candidates", ("sparse", "dense"))
+                spec.setdefault("objective", "bsp")
+                spec.setdefault("round_latency", 4.0)
+            self.mode_policy = StagePolicy(make_policy_config(spec))
         self.src_charger = TreeCharger(og.vertex_home, og.src_grp_indptr,
                                        og.src_grp_machines, og.C)
         self.replicator = make_replicator(self.replication, og.vertex_home,

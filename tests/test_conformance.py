@@ -33,7 +33,11 @@ from repro.core.fusedlam import FUSED_READ_OPS
 from _hyp import HAVE_HYPOTHESIS, given, settings, st
 
 NDEV = len(jax.devices())
-ENGINES = ["tdorch", "pull", "push", "sort"]
+# "auto" is the cost-model-driven policy (core/policy.py): it must be
+# value- and cost-conformant like any fixed engine — its decisions are
+# backend-independent, so per-phase parity (including the `policy` phase)
+# holds across the whole matrix
+ENGINES = ["tdorch", "pull", "push", "sort", "auto"]
 MERGES = ["add", "min", "max", "or", "write"]
 RTOL, ATOL = 2e-4, 1e-5
 
@@ -296,11 +300,13 @@ def _chain_case(seed, n=12, hops=3, K=40):
     return (rng.integers(0, K, (n, hops)), rng.standard_normal((n, 2)), K)
 
 
+@pytest.mark.parametrize("engine", ["tdorch", "auto"])
 @pytest.mark.parametrize("backend_name", ["jax", "jax_spmd"])
-def test_plan_emission_conformance(backend_name):
+def test_plan_emission_conformance(backend_name, engine):
     """run_chain — a StagePlan with a task-emitting continuation — must be
     hop-for-hop identical across backends (values within tolerance, per-hop
-    cost reports bit-identical)."""
+    cost reports bit-identical). With engine="auto" the per-hop policy
+    decisions ride the reports, so parity here also pins the decisions."""
     from repro.kvstore import DistributedHashTable
 
     keys, op, K = _chain_case(31)
@@ -311,7 +317,7 @@ def test_plan_emission_conformance(backend_name):
         ht.bulk_load(np.arange(K),
                      np.random.default_rng(7).standard_normal((K, 3)))
         out[getattr(bk, "name", bk)] = ht.run_chain(keys, op,
-                                                    engine="tdorch",
+                                                    engine=engine,
                                                     backend=bk)
     a, b = out["numpy"], out[backend_name]
     assert a.hops == b.hops
